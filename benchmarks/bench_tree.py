@@ -1,0 +1,92 @@
+"""Paper Table 5: phylogenetic tree construction time + quality.
+
+Direct NJ vs HPTree-style cluster-merge (the paper's approach), scored by
+(a) wall time, (b) JC69 log-likelihood (the paper's metric), (c) normalized
+Robinson-Foulds distance to the *known* generating topology — a check the
+paper could not do with real data.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import alphabet as ab
+from repro.core import cluster, distance, likelihood, nj, treeio
+from repro.core.msa import MSAConfig, center_star_msa
+from repro.data import SimConfig, simulate_family
+
+from .common import emit
+
+
+class _T:
+    def __init__(self, children, root):
+        self.children, self.root = children, root
+
+
+def table5_trees():
+    fam = simulate_family(SimConfig(n_leaves=96, root_len=512,
+                                    branch_sub=0.02, branch_indel=0.0005,
+                                    seed=11))
+    res = center_star_msa(fam.seqs, MSAConfig(method="kmer", k=10,
+                                              max_anchors=96, max_seg=48))
+    msa = jnp.asarray(res.msa)
+    gap, nch = ab.DNA.gap_code, ab.DNA.n_chars
+    gt = _T(fam.children, fam.root)
+
+    # direct NJ (monolithic)
+    D = distance.distance_matrix(msa, gap_code=gap, n_chars=nch)
+    D.block_until_ready()
+    t0 = time.perf_counter()
+    D = distance.distance_matrix(msa, gap_code=gap, n_chars=nch)
+    tree = nj.neighbor_joining(D, 96)
+    jnp.asarray(tree.children).block_until_ready()
+    us_direct = (time.perf_counter() - t0) * 1e6
+    ll = float(likelihood.log_likelihood(msa, tree.children, tree.blen,
+                                         tree.root, gap_code=gap))
+    rf = treeio.normalized_rf(_T(np.asarray(tree.children), int(tree.root)),
+                              gt, 96)
+    emit("table5/direct_nj", us_direct, f"logL={ll:.0f};RF={rf:.3f}")
+
+    # HPTree cluster-merge (the paper's scalable path)
+    t0 = time.perf_counter()
+    cp = cluster.cluster_phylogeny(res.msa, gap_code=gap, n_chars=nch,
+                                   cfg=cluster.ClusterConfig(
+                                       target_cluster=24, seed=0))
+    us_cluster = (time.perf_counter() - t0) * 1e6
+    ll_c = float(likelihood.log_likelihood(
+        msa, jnp.asarray(cp.children), jnp.asarray(cp.blen), cp.root,
+        gap_code=gap))
+    rf_c = treeio.normalized_rf(_T(cp.children, cp.root), gt, 96)
+    emit("table5/hptree_cluster", us_cluster,
+         f"logL={ll_c:.0f};RF={rf_c:.3f};k={cp.n_clusters}")
+
+
+def kernel_distance_speed():
+    """Pallas distance kernel (interpret) vs jnp oracle on the same MSA —
+    correctness-grade timing; the TPU win is architectural (one-hot stays in
+    VMEM), quantified in EXPERIMENTS.md §Roofline."""
+    from repro.core.distance import match_valid_counts
+    from repro.kernels.distance import match_valid_pallas
+    rng = np.random.default_rng(0)
+    msa = jnp.asarray(rng.integers(0, 6, (128, 512)).astype(np.int8))
+
+    def oracle():
+        return match_valid_counts(msa, gap_code=5, n_chars=5)
+
+    oracle()[0].block_until_ready()
+    t0 = time.perf_counter()
+    oracle()[0].block_until_ready()
+    us = (time.perf_counter() - t0) * 1e6
+    emit("kernels/distance_oracle_xla", us, "N=128;L=512")
+
+
+def main():
+    table5_trees()
+    kernel_distance_speed()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Shared benchmark utilities: wall-clock timing with compile excluded."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_call(fn, *args, repeats: int = 3, warmup: int = 1):
+    """Median wall time (us) of fn(*args) with jit warmup excluded."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6, out
+
+
+def time_host(fn, *args, repeats: int = 1):
+    """Wall time (us) of a host-level pipeline (includes jit on first call,
+    so callers warm up separately when comparing)."""
+    t0 = time.perf_counter()
+    out = fn(*args)
+    dt = time.perf_counter() - t0
+    return dt * 1e6, out
+
+
+def emit(name: str, us: float, derived):
+    print(f"{name},{us:.1f},{derived}")

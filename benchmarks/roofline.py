@@ -1,0 +1,262 @@
+"""Roofline analysis from the compiled dry-run artifacts (§Roofline).
+
+Terms per (arch x shape), single-pod (256 x v5e):
+  compute    = FLOPs/device / 197e12        [bf16 MXU peak]
+  memory     = bytes/device / 819e9         [HBM bw]
+  collective = collective bytes/device / 50e9  [ICI per link]
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` of the ROOFLINE lowering
+(layer scan unrolled, microbatches=1) because XLA counts while bodies once
+regardless of trip count (validated in EXPERIMENTS.md §Roofline). Two inner
+scans remain rolled even there — the flash-attention KV-chunk scan and the
+SSD chunk scan — so their missing trips are added back analytically from the
+exact einsum shapes (documented below); everything else is straight from the
+artifact. MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (inference)
+gives the useful-compute ratio.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+CHIPS = 256                # single-pod roofline
+KV_CHUNK = 1024            # layers.xla_flash default
+SSD_CHUNK = 128            # mamba2.ssd_chunked default
+
+
+def _counts(cfg):
+    attn_layers = sum(1 for i in range(cfg.n_layers)
+                      if cfg.layer_kind(i).startswith("attn"))
+    mamba_layers = cfg.n_layers - attn_layers if cfg.family in ("ssm", "hybrid") \
+        else 0
+    return attn_layers, mamba_layers
+
+
+def attn_flops(cfg, B, Sq, Skv, causal=True):
+    """QK^T + PV einsum flops for ONE attention layer, forward."""
+    eff = Skv / 2 if (causal and Sq == Skv) else Skv
+    if cfg.sliding_window:
+        eff = min(eff, cfg.sliding_window)
+    return 2 * 2 * B * cfg.n_heads * cfg.head_dim * Sq * eff
+
+
+def ssd_flops(cfg, B, S):
+    """Dominant SSD einsums for ONE mamba layer, forward."""
+    Q, st, nh, hp = SSD_CHUNK, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    cb = 2 * B * S * Q * st                       # C_i . B_j per chunk pair
+    intra = 2 * B * S * Q * nh * hp               # masked mix
+    states = 2 * B * S * st * nh * hp / max(Q, 1) * Q  # B (x dt) outer
+    inter = 2 * B * S * nh * hp * st              # C . h
+    return cb + intra + states + inter
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N_active·D convention (the §Roofline 'useful compute')."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch      # decode: one token per seq
+
+
+def scan_corrections(cfg, shape) -> float:
+    """Forward flops hidden inside still-rolled inner scans (global)."""
+    attn_l, mamba_l = _counts(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    extra = 0.0
+    if shape.kind in ("train", "prefill"):
+        trips = max(S // KV_CHUNK, 1)
+        a = attn_flops(cfg, B, S, S) * attn_l * (trips - 1) / max(trips, 1)
+        m_trips = max(S // SSD_CHUNK, 1)
+        m = ssd_flops(cfg, B, S) * mamba_l * (m_trips - 1) / max(m_trips, 1)
+        mult = 3.0 if shape.kind == "train" else 1.0   # bwd ~ 2x fwd
+        extra = (a + m) * mult
+    return extra
+
+
+def analytic_flops(cfg, shape) -> float:
+    """Full analytic step flops (global): matmul 2N·T + attention + SSD,
+    x3 bwd, x4/3 remat for train. Validated against unrolled compiles to
+    ~15 % (see EXPERIMENTS.md §Roofline)."""
+    attn_l, mamba_l = _counts(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    n = cfg.active_param_count()
+    if shape.kind == "decode":
+        per_tok = 2.0 * n * B
+        cache = attn_l * 4.0 * B * cfg.n_heads * cfg.head_dim * \
+            min(S, cfg.sliding_window or S)
+        ssm = mamba_l * 4.0 * B * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state
+        return per_tok + cache + ssm
+    fwd = 2.0 * n * B * S + attn_l * attn_flops(cfg, B, S, S) \
+        + mamba_l * ssd_flops(cfg, B, S)
+    if shape.kind == "prefill":
+        return fwd
+    mult = 4.0 if cfg.remat else 3.0
+    return fwd * mult
+
+
+def min_traffic_bytes(cfg, shape, mu: int) -> float:
+    """Analytic LOWER bound on HBM bytes/device/step (params + optimizer +
+    remat-boundary activations + caches; perfect fusion assumed). The XLA
+    'bytes accessed' number is the matching UPPER bound (fusion-blind)."""
+    p_dev = cfg.param_count() / CHIPS
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        t_dev = B * S / CHIPS
+        w = p_dev * (2 * 2 * mu      # bf16 param reads, fwd+bwd per micro
+                     + 4 + 4         # f32 grad write + read
+                     + 16 + 8 + 8)   # adam m,v r/w + master p r/w
+        acts = cfg.n_layers * t_dev * cfg.d_model * 2 * 2  # save+restore bf16
+        logits = t_dev * cfg.vocab_size * 4 * 2
+        return w + acts + logits
+    if shape.kind == "prefill":
+        t_dev = B * S / CHIPS
+        acts = cfg.n_layers * t_dev * cfg.d_model * 2
+        cache = cfg.n_layers * t_dev * 2 * cfg.n_kv_heads * cfg.head_dim * 2
+        return p_dev * 2 + acts + cache
+    # decode: stream the whole cache + params once per token
+    W = min(S, cfg.sliding_window or S)
+    attn_l = sum(1 for i in range(cfg.n_layers)
+                 if cfg.layer_kind(i).startswith("attn"))
+    cache = attn_l * (B / 1) * W * 2 * cfg.n_kv_heads * cfg.head_dim * 2 / CHIPS
+    ssm_l = cfg.n_layers - attn_l if cfg.family in ("ssm", "hybrid") else 0
+    ssm = ssm_l * B * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 4 / CHIPS
+    return p_dev * 2 + cache + ssm
+
+
+def analyze(rec: Dict, cfg, shape) -> Optional[Dict]:
+    if "error" in rec or "skipped" in rec:
+        return None
+    # roofline lowerings unroll layers but keep the (homogeneous) microbatch
+    # scan: multiply per-step totals by the recorded mu — exact, not an
+    # estimate. Records lowered with mu=1 multiply by 1.
+    mu = rec.get("microbatches", 1) if shape.kind == "train" else 1
+    ng_mu = mu
+    source = "hlo"
+    if not rec.get("roofline_mode", False):
+        # scanned lowering: while bodies counted once. Fall back to the
+        # validated analytic flop model; scale collectives by the known
+        # layer-scan trips (upper bound for the non-scan remainder).
+        import math as _m
+        from repro.models.transformer import n_groups as _ng
+        ng_mu = mu * max(_ng(cfg), 1)
+        source = "analytic"
+    if source == "hlo":
+        flops_dev = rec["flops_per_device"] * mu
+        corrected = flops_dev + scan_corrections(cfg, shape) / CHIPS
+        bytes_dev = rec["bytes_accessed_per_device"] * mu
+        coll = sum(rec["collective_bytes_per_device"].values()) * mu
+    else:
+        corrected = analytic_flops(cfg, shape) / CHIPS
+        bytes_dev = rec["bytes_accessed_per_device"] * ng_mu
+        coll = sum(rec["collective_bytes_per_device"].values()) * ng_mu
+    t_c = corrected / PEAK_FLOPS
+    t_m_hi = bytes_dev / HBM_BW
+    t_m_lo = min_traffic_bytes(cfg, shape, mu) / HBM_BW
+    t_n = coll / ICI_BW
+    # bottleneck judged with the achievable (min-traffic) memory term; the
+    # fusion-blind upper bound is reported alongside
+    terms = {"compute": t_c, "memory": t_m_lo, "collective": t_n}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "source": source,
+        "compute_s": t_c, "memory_lo_s": t_m_lo, "memory_hi_s": t_m_hi,
+        "collective_s": t_n,
+        "bottleneck": bottleneck,
+        "model_flops": mf,
+        "hlo_flops_global": corrected * CHIPS,
+        "useful_ratio": mf / (corrected * CHIPS) if corrected > 0 else 0.0,
+        "roofline_fraction": t_c / max(terms.values()) if max(terms.values()) > 0 else 0.0,
+    }
+
+
+ADVICE = {
+    "compute": "compute-bound: raise MXU utilization (larger tiles, bf16 "
+               "everywhere, fewer remat recomputes)",
+    "memory": "HBM-bound: cut activation traffic (fused kernels, smaller "
+              "remat policy, bf16 intermediates, flash attention)",
+    "collective": "ICI-bound: overlap collectives with compute (collective "
+                  "matmul), shard params deeper (FSDP), compress gradients",
+}
+
+
+def main(out="results/roofline.md"):
+    from repro.configs import ALL_ARCHS, SHAPES, get_arch, shape_applicable
+
+    recs: Dict = {}
+    # roofline-mode lowerings (preferred; trip-exact)
+    for p in ("results/roofline_rest.jsonl.head", "results/roofline_rest.jsonl",
+              "results/dryrun_roofline.json"):
+        pp = Path(p)
+        if not pp.exists():
+            continue
+        if p.endswith(".json"):
+            data = json.loads(pp.read_text())
+        else:
+            data = []
+            dec = json.JSONDecoder()
+            for line in pp.read_text().splitlines():
+                line = line.strip()
+                while line.startswith("{"):
+                    obj, end = dec.raw_decode(line)
+                    data.append(obj)
+                    line = line[end:].strip()
+        for r in data:
+            if "flops_per_device" in r:
+                recs[(r["arch"], r["shape"])] = r
+    # scanned dry-run as analytic-model fallback
+    fb = Path("results/dryrun_all.json")
+    if fb.exists():
+        for r in json.loads(fb.read_text()):
+            if (r.get("mesh") == "pod" and r.get("shape") not in (None, "msa")
+                    and "flops_per_device" in r):
+                recs.setdefault((r["arch"], r["shape"]), r)
+
+    rows = []
+    for arch in ALL_ARCHS:
+        cfg = get_arch(arch).config
+        for shape_name, shape in SHAPES.items():
+            ok, why = shape_applicable(cfg, shape)
+            if not ok:
+                rows.append({"arch": arch, "shape": shape_name,
+                             "skipped": why})
+                continue
+            rec = recs.get((arch, shape_name))
+            if rec is None:
+                rows.append({"arch": arch, "shape": shape_name,
+                             "skipped": "no dry-run record"})
+                continue
+            r = analyze(rec, cfg, shape)
+            if r:
+                rows.append(r)
+
+    lines = ["| arch | shape | src | compute s | memory s (lo..hi) | "
+             "collective s | bottleneck | useful ratio | roofline frac | "
+             "next move |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                         f"skipped: {r['skipped']} | — | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['source']} | "
+            f"{r['compute_s']:.3e} | {r['memory_lo_s']:.2e}..{r['memory_hi_s']:.2e} | "
+            f"{r['collective_s']:.3e} | {r['bottleneck']} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_fraction']:.2f} | "
+            f"{ADVICE[r['bottleneck']].split(':')[1].strip()} |")
+    Path(out).parent.mkdir(parents=True, exist_ok=True)
+    Path(out).write_text("\n".join(lines) + "\n")
+    print("\n".join(lines))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

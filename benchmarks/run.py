@@ -1,0 +1,25 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  table2/* — genome MSA (paper Table 2): plain vs k-mer center star
+  table3/* — RNA MSA (Table 3)
+  table4/* — protein MSA (Table 4): SW vs NW center star
+  table5/* — phylogeny construction (Table 5): NJ vs HPTree cluster-merge
+  fig5/*   — memory per device from the dry-run artifacts (Figure 5)
+  fig6/*   — per-worker shard scaling (Figure 6)
+  scaling/*— O(n) sequence-count scaling
+Run the multi-pod dry-run separately: ``python -m repro.launch.dryrun --all``.
+"""
+from __future__ import annotations
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from . import bench_msa, bench_scaling, bench_tree
+    bench_msa.main()
+    bench_tree.main()
+    bench_scaling.main()
+
+
+if __name__ == "__main__":
+    main()

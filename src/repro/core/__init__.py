@@ -1,0 +1,4 @@
+"""HAlign-II core: center-star MSA, k-mer index, NJ phylogeny, metrics."""
+from . import alphabet, centerstar, cluster, distance, kmer_index  # noqa: F401
+from . import likelihood, msa, nj, pairwise, sp_score, treeio  # noqa: F401
+from .msa import MSAConfig, MSAResult, center_star_msa, decode_msa  # noqa: F401

@@ -1,0 +1,104 @@
+"""Center-star MSA assembly: the paper's two MapReduce stages, vectorized.
+
+Stage map(1): every sequence is pairwise-aligned to the broadcast center
+(``pairwise.align_many_to_one`` or the k-mer path). Stage reduce(1): the
+per-pair insert-space profiles are merged with an elementwise ``max`` — on a
+mesh this is literally one ``pmax``. Stage map(2): every pairwise alignment
+is re-emitted padded to the merged profile. This module implements the
+profile extraction, the merge, and the final row construction, all shape-
+static and vmap/shard_map friendly.
+
+Conventions: aligned pairs are (a_row, b_row) int8 with gap_code for gaps
+*and* padding; columns where both rows are gaps are dead padding and are
+ignored (the k-mer assembly path produces interior dead columns by design).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _cpos_and_masks(a_row, b_row, gap_code):
+    """Per-column center index + insertion mask for one aligned pair."""
+    ischar_b = b_row != gap_code
+    ins = (b_row == gap_code) & (a_row != gap_code)   # real insertion into center
+    # number of center chars strictly before column t (exclusive cumsum)
+    cpos = jnp.cumsum(ischar_b.astype(jnp.int32)) - ischar_b.astype(jnp.int32)
+    return ischar_b, ins, cpos
+
+
+def gap_profiles(a_rows, b_rows, *, gap_code: int, num_slots: int):
+    """Insert-space profiles g[i, j] = #gaps pair i inserts before center char j.
+
+    a_rows/b_rows: (N, P) int8 aligned pairs (b = center). num_slots must be
+    >= lc + 1 (slot lc counts gaps after the last center char).
+    """
+    def one(a_row, b_row):
+        _, ins, cpos = _cpos_and_masks(a_row, b_row, gap_code)
+        seg = jnp.clip(cpos, 0, num_slots - 1)
+        return jax.ops.segment_sum(ins.astype(jnp.int32), seg, num_segments=num_slots)
+    return jax.vmap(one)(a_rows, b_rows)
+
+
+def merge_profiles(g):
+    """reduce(1): merged center profile = columnwise max over pairs."""
+    return jnp.max(g, axis=0)
+
+
+def msa_width(G, lc: int) -> int:
+    """Final MSA width (host-side; G concrete)."""
+    return int(lc) + int(jnp.sum(G))
+
+
+@functools.partial(jax.jit, static_argnames=("gap_code", "out_len"))
+def build_rows(a_rows, b_rows, G, *, gap_code: int, out_len: int):
+    """map(2): place each sequence's chars into the merged-profile frame.
+
+    Layout: for center char j, columns [col(j)-G[j], col(j)) are its insertion
+    block (right-packed) and col(j) = j + cumsum(G)[j] holds the char itself.
+    """
+    cumG = jnp.cumsum(G)                       # inclusive
+    col_of = jnp.arange(G.shape[0]) + cumG     # col(j), defined for j in [0, lc]
+
+    def one(a_row, b_row):
+        P = a_row.shape[0]
+        ischar_b, ins, cpos = _cpos_and_masks(a_row, b_row, gap_code)
+        j = jnp.clip(cpos, 0, G.shape[0] - 1)
+        # rank of each insertion within its run (contiguity not required)
+        cumins = jnp.cumsum(ins.astype(jnp.int32))
+        g_here = jax.ops.segment_sum(ins.astype(jnp.int32), j,
+                                     num_segments=G.shape[0])
+        last_char_idx = jax.lax.cummax(
+            jnp.where(ischar_b, jnp.arange(P), -1))
+        base = jnp.where(last_char_idx >= 0,
+                         cumins[jnp.maximum(last_char_idx, 0)], 0)
+        o = cumins - 1 - base
+        tgt_char = col_of[j]
+        tgt_ins = col_of[j] - g_here[j] + o
+        target = jnp.where(ischar_b, tgt_char, jnp.where(ins, tgt_ins, out_len))
+        target = jnp.where(a_row != gap_code, target, out_len)  # only place real chars
+        row = jnp.full((out_len,), gap_code, jnp.int8)
+        return row.at[target].set(a_row, mode="drop")
+
+    return jax.vmap(one)(a_rows, b_rows)
+
+
+@functools.partial(jax.jit, static_argnames=("gap_code", "out_len"))
+def center_msa_row(center, lc, G, *, gap_code: int, out_len: int):
+    """The center sequence's own row in the merged frame."""
+    cumG = jnp.cumsum(G)
+    col_of = jnp.arange(G.shape[0]) + cumG
+    idx = jnp.arange(center.shape[0])
+    target = jnp.where((idx < lc), col_of[jnp.clip(idx, 0, G.shape[0] - 1)], out_len)
+    row = jnp.full((out_len,), gap_code, jnp.int8)
+    return row.at[target].set(center, mode="drop")
+
+
+def drop_dead_columns(msa, gap_code: int):
+    """Remove all-gap columns (host-side utility; returns a new array)."""
+    import numpy as np
+    msa = np.asarray(msa)
+    keep = ~(msa == gap_code).all(axis=0)
+    return msa[:, keep]

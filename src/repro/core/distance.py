@@ -1,0 +1,83 @@
+"""Pairwise distance matrices from MSA results.
+
+The N x N p-distance over aligned columns is the compute hot-spot of the
+phylogeny pipeline — HAlign-II distributes it over the cluster; we turn it
+into MXU work: per-symbol one-hot matmuls accumulated over column chunks
+(never materializing the full (N, L*C) one-hot). The Pallas kernel in
+``repro.kernels.distance`` fuses the one-hot construction into the matmul
+tiles; this module is the XLA/jnp oracle with the same chunking.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("gap_code", "n_chars", "chunk"))
+def match_valid_counts(msa, other=None, *, gap_code: int, n_chars: int,
+                       chunk: int = 512):
+    """Returns (match, valid): per-pair counts of equal non-gap columns and
+    both-non-gap columns, via chunked one-hot matmuls (f32 exact for counts
+    < 2^24). With ``other`` given, computes the (N, M) cross counts instead
+    (used for medoid assignment in the HPTree clustering stage)."""
+    N, L = msa.shape
+    sym = other is None
+    other = msa if sym else other
+    M = other.shape[0]
+    pad = (-L) % chunk
+    msa = jnp.pad(msa, ((0, 0), (0, pad)), constant_values=gap_code)
+    other = jnp.pad(other, ((0, 0), (0, pad)), constant_values=gap_code)
+    nchunks = (L + pad) // chunk
+    chunks_a = msa.reshape(N, nchunks, chunk).transpose(1, 0, 2)
+    chunks_b = other.reshape(M, nchunks, chunk).transpose(1, 0, 2)
+
+    def onehot(blk):
+        oh = (blk[:, :, None] == jnp.arange(n_chars)[None, None, :])
+        oh = (oh & (blk[:, :, None] != gap_code)).astype(jnp.float32)
+        return oh.reshape(blk.shape[0], -1)
+
+    def body(carry, blks):
+        match, valid = carry
+        ba, bb = blks
+        na = ((ba != gap_code) & (ba < n_chars)).astype(jnp.float32)
+        nb = ((bb != gap_code) & (bb < n_chars)).astype(jnp.float32)
+        valid = valid + na @ nb.T
+        match = match + onehot(ba) @ onehot(bb).T
+        return (match, valid), None
+
+    z = jnp.zeros((N, M), jnp.float32)
+    (match, valid), _ = jax.lax.scan(body, (z, z), (chunks_a, chunks_b))
+    return match, valid
+
+
+def p_distance(msa, *, gap_code: int, n_chars: int, chunk: int = 512):
+    match, valid = match_valid_counts(msa, gap_code=gap_code, n_chars=n_chars,
+                                      chunk=chunk)
+    p = 1.0 - match / jnp.maximum(valid, 1.0)
+    return jnp.where(valid > 0, p, 0.75)   # saturated when no overlap
+
+
+def jc69_distance(p):
+    """Jukes-Cantor correction d = -3/4 ln(1 - 4/3 p), clipped to stay finite."""
+    x = jnp.clip(1.0 - 4.0 / 3.0 * p, 1e-6, 1.0)
+    return -0.75 * jnp.log(x)
+
+
+def distance_matrix(msa, *, gap_code: int, n_chars: int, correct: bool = True,
+                    chunk: int = 512):
+    p = p_distance(msa, gap_code=gap_code, n_chars=n_chars, chunk=chunk)
+    d = jc69_distance(p) if correct else p
+    d = (d + d.T) / 2.0
+    return d * (1.0 - jnp.eye(d.shape[0]))
+
+
+def cross_distance(msa, other, *, gap_code: int, n_chars: int,
+                   correct: bool = True, chunk: int = 512):
+    """(N, M) distances between two row sets (medoid assignment)."""
+    match, valid = match_valid_counts(msa, other, gap_code=gap_code,
+                                      n_chars=n_chars, chunk=chunk)
+    p = 1.0 - match / jnp.maximum(valid, 1.0)
+    p = jnp.where(valid > 0, p, 0.75)
+    return jc69_distance(p) if correct else p

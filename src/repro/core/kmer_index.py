@@ -1,0 +1,119 @@
+"""Trie tree -> k-mer index: the TPU-native adaptation of HAlign's trie.
+
+The paper indexes the center sequence with a trie so common substrings with
+every other sequence are found in O(1) per position; DP then runs only on the
+unmatched inter-anchor segments. Tries are pointer-chasing structures; on a
+TPU the same contract is met by a dense integer table: every length-k window
+of the center is encoded as a base-4 integer and scattered (min = first
+occurrence) into a 4^k table. Queries compute their own rolling codes, probe
+the table with one gather, and greedily chain monotone hits into anchors.
+Asymptotics match the trie (O(m) build, O(1) probe); the constant factors are
+vector loads instead of cache-missing pointer walks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+EMPTY = jnp.int32(2**30)
+
+
+class Anchors(NamedTuple):
+    q_pos: jnp.ndarray    # (A,) i32 anchor start in query
+    c_pos: jnp.ndarray    # (A,) i32 anchor start in center
+    count: jnp.ndarray    # i32 number of accepted anchors
+    ok: jnp.ndarray       # bool: every inter-anchor/tail segment <= max_seg
+
+
+def kmer_codes(seq, length, k: int):
+    """Rolling base-4 codes; invalid windows (N/gap or beyond length) -> -1."""
+    n = seq.shape[0]
+    windows = jnp.stack([seq[i: n - k + 1 + i] for i in range(k)], axis=1)
+    windows = windows.astype(jnp.int32)
+    powers = jnp.array([4**i for i in range(k)], dtype=jnp.int32)
+    codes = windows @ powers
+    valid = jnp.all(windows < 4, axis=1)
+    valid &= jnp.arange(n - k + 1) <= (length - k)
+    return jnp.where(valid, codes, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "r"))
+def build_center_index(center, lc, *, k: int, r: int = 4):
+    """(4^k, r) i32 table: code -> first r positions in center (EMPTY pad).
+
+    r > 1 matters for repetitive sequences: greedy chaining needs the first
+    occurrence *at or after* the current chain end, not the global first.
+    This is the dense-array equivalent of a trie node holding a position list.
+    """
+    codes = kmer_codes(center, lc, k)
+    pos = jnp.arange(codes.shape[0], dtype=jnp.int32)
+    idx = jnp.where(codes >= 0, codes, 4**k)  # invalid -> dropped
+    cols = []
+    floor = jnp.full((4**k,), -1, jnp.int32)
+    for _ in range(r):
+        tbl = jnp.full((4**k,), EMPTY, jnp.int32)
+        live = jnp.where(codes >= 0, pos > floor[jnp.clip(codes, 0)], False)
+        tbl = tbl.at[jnp.where(live, idx, 4**k)].min(pos, mode="drop")
+        cols.append(tbl)
+        floor = tbl
+    return jnp.stack(cols, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "stride", "max_anchors", "max_seg"))
+def chain_anchors(q, lq, table, lc, *, k: int, stride: int, max_anchors: int,
+                  max_seg: int):
+    """Greedy monotone chaining of k-mer hits (the trie-walk equivalent).
+
+    Accept hit (t, c) iff it extends the chain (t >= q_end, c >= c_end) and
+    the inter-anchor segments it closes are both <= max_seg. ``ok`` is False
+    when the final tail exceeds max_seg or no anchor coverage was achieved —
+    the MSA driver then falls back to full DP for that pair.
+    """
+    codes = kmer_codes(q, lq, k)
+    cand = jnp.where(codes[:, None] >= 0, table[jnp.clip(codes, 0)], EMPTY)
+    t_steps = jnp.arange(0, codes.shape[0], stride)
+
+    def step(carry, t):
+        q_end, c_end, cnt, aq, ac = carry
+        # first center occurrence at or after the chain end (trie walk with
+        # position list); EMPTY if none of the stored r occurrences qualify
+        cs = cand[t]
+        c = jnp.min(jnp.where(cs >= c_end, cs, EMPTY))
+        seg_q = t - q_end
+        seg_c = c - c_end
+        accept = ((c != EMPTY) & (t >= q_end) & (c >= c_end)
+                  & (seg_q <= max_seg) & (seg_c <= max_seg)
+                  & (cnt < max_anchors) & (t + k <= lq) & (c + k <= lc))
+        aq = jnp.where(accept, aq.at[cnt].set(t), aq)
+        ac = jnp.where(accept, ac.at[cnt].set(c), ac)
+        q_end = jnp.where(accept, t + k, q_end)
+        c_end = jnp.where(accept, c + k, c_end)
+        cnt = jnp.where(accept, cnt + 1, cnt)
+        return (q_end, c_end, cnt, aq, ac), None
+
+    aq0 = jnp.zeros((max_anchors,), jnp.int32)
+    ac0 = jnp.zeros((max_anchors,), jnp.int32)
+    (q_end, c_end, cnt, aq, ac), _ = jax.lax.scan(
+        step, (jnp.int32(0), jnp.int32(0), jnp.int32(0), aq0, ac0), t_steps)
+    tail_ok = ((lq - q_end) <= max_seg) & ((lc - c_end) <= max_seg)
+    ok = tail_ok & (cnt > 0)
+    return Anchors(aq, ac, cnt, ok)
+
+
+def segment_bounds(anchors: Anchors, lq, lc, *, k: int):
+    """Start/length of the A+1 inter-anchor segments in query and center."""
+    A = anchors.q_pos.shape[0]
+    s = jnp.arange(A + 1)
+    prev_q_end = jnp.where(s == 0, 0, anchors.q_pos[jnp.clip(s - 1, 0)] + k)
+    prev_c_end = jnp.where(s == 0, 0, anchors.c_pos[jnp.clip(s - 1, 0)] + k)
+    next_q = jnp.where(s < anchors.count, anchors.q_pos[jnp.clip(s, 0, A - 1)], lq)
+    next_c = jnp.where(s < anchors.count, anchors.c_pos[jnp.clip(s, 0, A - 1)], lc)
+    live = s <= anchors.count                    # segments past the tail are empty
+    q_len = jnp.where(live, jnp.maximum(next_q - prev_q_end, 0), 0)
+    c_len = jnp.where(live, jnp.maximum(next_c - prev_c_end, 0), 0)
+    q_start = jnp.where(live, prev_q_end, 0)
+    c_start = jnp.where(live, prev_c_end, 0)
+    return q_start, q_len, c_start, c_len

@@ -1,0 +1,63 @@
+"""JC69 log-likelihood of an MSA given a tree (Felsenstein pruning).
+
+The paper evaluates phylogeny quality by maximum-likelihood value; we provide
+the vectorized evaluator: partial likelihoods for all sites at once, a scan
+over internal nodes in topological order (NJ emits children-before-parents by
+construction), with per-node rescaling against underflow. Used by
+benchmarks/bench_tree.py to score NJ and HPTree trees like the paper's
+Table 5 commentary (logL ~ -2.19e7 for their DNA set).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def jc69_transition(t):
+    """4x4 JC69 transition matrix for branch length t (expected subs/site)."""
+    e = jnp.exp(-4.0 * jnp.maximum(t, 1e-8) / 3.0)
+    same = 0.25 + 0.75 * e
+    diff = 0.25 - 0.25 * e
+    return diff[..., None, None] * jnp.ones((4, 4)) + \
+        (same - diff)[..., None, None] * jnp.eye(4)
+
+
+@functools.partial(jax.jit, static_argnames=("gap_code",))
+def log_likelihood(msa, children, blen, root, *, gap_code: int):
+    """JC69 logL; gap/N columns contribute uninformative all-ones partials.
+
+    msa: (N, L) int8 with codes A,C,G,T = 0..3; children (M, 2); blen (M, 2).
+    """
+    N, L = msa.shape
+    M = children.shape[0]
+    codes = msa.astype(jnp.int32)
+    leaf_part = jnp.where((codes[..., None] == jnp.arange(4)) |
+                          (codes[..., None] >= 4), 1.0, 0.0)  # (N, L, 4)
+
+    parts = jnp.zeros((M, L, 4), jnp.float32)
+    parts = parts.at[:N].set(leaf_part)
+    scales = jnp.zeros((M, L), jnp.float32)
+
+    def body(node, carry):
+        parts, scales = carry
+        c0 = children[node, 0]
+        c1 = children[node, 1]
+        is_internal = c0 >= 0
+        p0 = jc69_transition(blen[node, 0])
+        p1 = jc69_transition(blen[node, 1])
+        l0 = parts[jnp.maximum(c0, 0)]
+        l1 = parts[jnp.maximum(c1, 0)]
+        part = (l0 @ p0.T) * (l1 @ p1.T)
+        m = jnp.maximum(jnp.max(part, axis=-1, keepdims=True), 1e-30)
+        part = part / m
+        sc = (scales[jnp.maximum(c0, 0)] + scales[jnp.maximum(c1, 0)]
+              + jnp.log(m[..., 0]))
+        parts = jnp.where(is_internal, parts.at[node].set(part), parts)
+        scales = jnp.where(is_internal, scales.at[node].set(sc), scales)
+        return parts, scales
+
+    parts, scales = jax.lax.fori_loop(N, M, body, (parts, scales))
+    site_l = jnp.sum(0.25 * parts[root], axis=-1)
+    return jnp.sum(jnp.log(jnp.maximum(site_l, 1e-30)) + scales[root])

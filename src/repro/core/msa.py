@@ -1,0 +1,227 @@
+"""High-level MSA driver: HAlign-II's pipeline as host-orchestrated jitted stages.
+
+Pipeline (paper Fig. 3):
+  1. pick the center sequence (first, or most-shared-kmers sample heuristic)
+  2. map(1): align every sequence to the broadcast center
+       - 'sw' / 'plain': full Gotoh DP (protein path / original center star)
+       - 'kmer': chain k-mer anchors, DP only on inter-anchor segments
+         (trie-accelerated path; per-pair fallback to full DP when chaining
+         fails, e.g. diverged sequences)
+  3. reduce(1): merge insert-space profiles (columnwise max)
+  4. map(2): rebuild every row in the merged frame
+
+The distributed version (launch/msa_run.py, repro.dist.mapreduce) runs the
+same jitted stages under shard_map with the center replicated; this module is
+the single-host reference and the building block.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import alphabet as ab
+from . import centerstar, kmer_index, pairwise
+
+
+@dataclasses.dataclass(frozen=True)
+class MSAConfig:
+    alphabet: str = "dna"            # dna | rna | protein
+    method: str = "kmer"             # kmer | plain | sw
+    match: int = 2
+    mismatch: int = -1
+    gap_open: int = 3
+    gap_extend: int = 1
+    k: int = 11                      # k-mer width (trie depth equivalent)
+    stride: int = 1                  # query probe stride
+    max_anchors: int = 256
+    max_seg: int = 64                # inter-anchor DP budget
+    center: str = "first"            # first | sampled
+    local: bool = False              # Smith-Waterman local stage-1 alignment
+
+    def alpha(self) -> ab.Alphabet:
+        return {"dna": ab.DNA, "rna": ab.RNA, "protein": ab.PROTEIN}[self.alphabet]
+
+    def matrix(self) -> jnp.ndarray:
+        if self.alphabet == "protein":
+            return ab.blosum62().astype(jnp.float32)
+        return ab.dna_matrix(self.match, self.mismatch).astype(jnp.float32)
+
+
+class MSAResult(NamedTuple):
+    msa: np.ndarray          # (N, L) int8 aligned rows, original order
+    center_idx: int
+    n_fallback: int          # pairs that fell back from kmer to full DP
+    width: int
+
+
+# ---------------------------------------------------------------- k-mer path
+
+@functools.partial(jax.jit, static_argnames=("k", "stride", "max_anchors",
+                                             "max_seg", "gap_open",
+                                             "gap_extend", "gap_code"))
+def kmer_align_batch(Q, lens, center, lc, table, sub, *, k, stride,
+                     max_anchors, max_seg, gap_open, gap_extend, gap_code):
+    """Anchor-chained alignment of a batch of queries against the center.
+
+    Returns (a_rows, b_rows) in a fixed assembly buffer plus per-pair ok flags.
+    Dead (gap,gap) columns are interior padding, ignored downstream.
+    """
+    A = max_anchors
+    blk = 2 * max_seg
+    kbuf = (A + 1) * blk + A * k + blk
+
+    def one(q, lq):
+        anch = kmer_index.chain_anchors(q, lq, table, lc, k=k, stride=stride,
+                                        max_anchors=A, max_seg=max_seg)
+        qs, qlen, cs, clen = kmer_index.segment_bounds(anch, lq, lc, k=k)
+
+        def get_seg(seq, start, length, width):
+            # pad before slicing so end-of-sequence segments stay aligned
+            seqp = jnp.concatenate(
+                [seq, jnp.full((width,), gap_code, seq.dtype)])
+            s = jax.lax.dynamic_slice(seqp, (jnp.clip(start, 0, seq.shape[0]),),
+                                      (width,))
+            mask = jnp.arange(width) < length
+            return jnp.where(mask, s, gap_code).astype(jnp.int8)
+
+        seg_q = jax.vmap(lambda s, l: get_seg(q, s, l, max_seg))(qs, qlen)
+        seg_c = jax.vmap(lambda s, l: get_seg(center, s, l, max_seg))(cs, clen)
+
+        aln = jax.vmap(lambda a, la, b, lb: pairwise.align_pair(
+            a, la, b, lb, sub, gap_open=gap_open, gap_extend=gap_extend,
+            local=False, gap_code=gap_code))(seg_q, qlen, seg_c, clen)
+
+        # anchor blocks: exact k-length matches, padded to blk
+        def anchor_block(aq, ac):
+            qa = get_seg(q, aq, jnp.int32(k), blk)
+            ca = get_seg(center, ac, jnp.int32(k), blk)
+            return qa, ca
+        anch_a, anch_b = jax.vmap(anchor_block)(anch.q_pos, anch.c_pos)
+        anch_live = jnp.arange(A) < anch.count
+        anch_len = jnp.where(anch_live, k, 0)
+
+        # interleave: seg0, anch0, seg1, anch1, ..., seg_A
+        blocks_a = jnp.zeros((2 * A + 1, blk), jnp.int8)
+        blocks_b = jnp.zeros((2 * A + 1, blk), jnp.int8)
+        blocks_a = blocks_a.at[0::2].set(aln.a_row[:, :blk])
+        blocks_b = blocks_b.at[0::2].set(aln.b_row[:, :blk])
+        blocks_a = blocks_a.at[1::2].set(anch_a)
+        blocks_b = blocks_b.at[1::2].set(anch_b)
+        seg_live = jnp.arange(A + 1) <= anch.count
+        seg_len = jnp.where(seg_live, aln.aln_len, 0)
+        lens_u = jnp.zeros((2 * A + 1,), jnp.int32)
+        lens_u = lens_u.at[0::2].set(seg_len)
+        lens_u = lens_u.at[1::2].set(anch_len)
+
+        buf_a = jnp.full((kbuf,), gap_code, jnp.int8)
+        buf_b = jnp.full((kbuf,), gap_code, jnp.int8)
+
+        def put(u, carry):
+            ba, bb, off = carry
+            ba = jax.lax.dynamic_update_slice(ba, blocks_a[u], (off,))
+            bb = jax.lax.dynamic_update_slice(bb, blocks_b[u], (off,))
+            return ba, bb, off + lens_u[u]
+        buf_a, buf_b, _ = jax.lax.fori_loop(0, 2 * A + 1, put, (buf_a, buf_b, jnp.int32(0)))
+        return buf_a, buf_b, anch.ok
+
+    return jax.vmap(one)(Q, lens)
+
+
+# ------------------------------------------------------------------- driver
+
+def center_star_msa(seqs: Sequence[str] | np.ndarray,
+                    cfg: MSAConfig,
+                    lens: Optional[np.ndarray] = None) -> MSAResult:
+    alpha = cfg.alpha()
+    gap = alpha.gap_code
+    if isinstance(seqs, (list, tuple)):
+        S, lens = ab.encode_batch([s.replace("U", "T").replace("u", "t")
+                                   if cfg.alphabet == "rna" else s for s in seqs], alpha)
+    else:
+        S = jnp.asarray(seqs)
+        lens = jnp.asarray(lens)
+    N, Lmax = S.shape
+    if N < 2:
+        return MSAResult(np.asarray(S), 0, 0, Lmax)
+    sub = cfg.matrix()
+
+    cidx = _select_center(S, lens, cfg)
+    center = S[cidx]
+    lc = lens[cidx]
+    others = np.array([i for i in range(N) if i != cidx])
+    Q, qlens = S[jnp.asarray(others)], lens[jnp.asarray(others)]
+
+    n_fallback = 0
+    if cfg.method == "kmer":
+        table = kmer_index.build_center_index(center, lc, k=cfg.k)
+        a_rows, b_rows, ok = kmer_align_batch(
+            Q, qlens, center, lc, table, sub, k=cfg.k, stride=cfg.stride,
+            max_anchors=cfg.max_anchors, max_seg=cfg.max_seg,
+            gap_open=cfg.gap_open, gap_extend=cfg.gap_extend, gap_code=gap)
+        ok = np.asarray(ok)
+        a_rows, b_rows = np.array(a_rows), np.array(b_rows)
+        bad = np.flatnonzero(~ok)
+        n_fallback = len(bad)
+        if n_fallback:
+            res = pairwise.align_many_to_one(
+                Q[jnp.asarray(bad)], qlens[jnp.asarray(bad)], center, lc, sub,
+                gap_open=cfg.gap_open, gap_extend=cfg.gap_extend,
+                local=False, gap_code=gap)
+            P = max(a_rows.shape[1], res.a_row.shape[1])
+            a_rows = _pad_to(a_rows, P, gap)
+            b_rows = _pad_to(b_rows, P, gap)
+            a_rows[bad] = _pad_to(np.asarray(res.a_row), P, gap)
+            b_rows[bad] = _pad_to(np.asarray(res.b_row), P, gap)
+    else:
+        res = pairwise.align_many_to_one(
+            Q, qlens, center, lc, sub, gap_open=cfg.gap_open,
+            gap_extend=cfg.gap_extend, local=cfg.local, gap_code=gap)
+        a_rows, b_rows = np.asarray(res.a_row), np.asarray(res.b_row)
+
+    num_slots = int(center.shape[0]) + 1
+    g = centerstar.gap_profiles(jnp.asarray(a_rows), jnp.asarray(b_rows),
+                                gap_code=gap, num_slots=num_slots)
+    G = centerstar.merge_profiles(g)
+    width = centerstar.msa_width(G, int(lc))
+
+    rows = centerstar.build_rows(jnp.asarray(a_rows), jnp.asarray(b_rows), G,
+                                 gap_code=gap, out_len=width)
+    crow = centerstar.center_msa_row(center, lc, G, gap_code=gap, out_len=width)
+
+    msa = np.full((N, width), gap, np.int8)
+    msa[others] = np.asarray(rows)
+    msa[cidx] = np.asarray(crow)
+    return MSAResult(msa, int(cidx), n_fallback, width)
+
+
+def _pad_to(x: np.ndarray, P: int, gap: int) -> np.ndarray:
+    if x.shape[-1] >= P:
+        return x
+    pad = np.full(x.shape[:-1] + (P - x.shape[-1],), gap, x.dtype)
+    return np.concatenate([x, pad], axis=-1)
+
+
+def _select_center(S, lens, cfg: MSAConfig) -> int:
+    if cfg.center == "first" or S.shape[0] <= 2 or cfg.alphabet == "protein":
+        return 0
+    # 'sampled': index sequence 0, pick the sequence sharing the most k-mers —
+    # the paper's "contains the most segments among all sequences" heuristic.
+    table = kmer_index.build_center_index(S[0], lens[0], k=cfg.k)
+
+    @jax.jit
+    def hits(q, lq):
+        codes = kmer_index.kmer_codes(q, lq, cfg.k)
+        cand = table[jnp.clip(codes, 0), 0]          # first occurrence column
+        return jnp.sum((codes >= 0) & (cand != kmer_index.EMPTY))
+    h = jax.vmap(hits)(S, lens)
+    return int(jnp.argmax(h))
+
+
+def decode_msa(msa: np.ndarray, cfg: MSAConfig) -> list[str]:
+    alpha = cfg.alpha()
+    return [alpha.decode(r) for r in np.asarray(msa)]

@@ -1,0 +1,38 @@
+"""Minimal, robust FASTA reader/writer (the system's HDFS stand-in)."""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Iterable, List, Tuple
+
+
+def read_fasta(path) -> Tuple[List[str], List[str]]:
+    names, seqs = [], []
+    cur: list[str] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            if line.startswith(">"):
+                if cur:
+                    seqs.append("".join(cur))
+                    cur = []
+                names.append(line[1:].split()[0])
+            else:
+                cur.append(line)
+    if cur:
+        seqs.append("".join(cur))
+    if len(names) != len(seqs):
+        raise ValueError(f"malformed FASTA {path}: {len(names)} headers, "
+                         f"{len(seqs)} sequences")
+    return names, seqs
+
+
+def write_fasta(path, names: Iterable[str], seqs: Iterable[str], width: int = 80):
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "w") as f:
+        for n, s in zip(names, seqs):
+            f.write(f">{n}\n")
+            for i in range(0, len(s), width):
+                f.write(s[i: i + width] + "\n")

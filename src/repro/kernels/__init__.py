@@ -1,0 +1,1 @@
+from . import sw, distance, flash_attention  # noqa: F401

@@ -1,0 +1,2 @@
+from .ops import match_valid_pallas, distance_matrix_pallas  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,39 @@
+"""jit'd wrapper: pad, call the kernel, crop, and a full distance_matrix."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core.distance import jc69_distance
+from .distance_kernel import match_valid_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("n_chars", "gap_code", "bn", "bl",
+                                             "interpret"))
+def match_valid_pallas(msa_a, msa_b, *, n_chars: int, gap_code: int,
+                       bn: int = 128, bl: int = 128, interpret: bool = True):
+    N, L = msa_a.shape
+    M = msa_b.shape[0]
+    pn, pm, pl_ = (-N) % bn, (-M) % bn, (-L) % bl
+    a = jnp.pad(msa_a, ((0, pn), (0, pl_)), constant_values=gap_code)
+    b = jnp.pad(msa_b, ((0, pm), (0, pl_)), constant_values=gap_code)
+    match, valid = match_valid_kernel(a, b, n_chars=n_chars, gap_code=gap_code,
+                                      bn=bn, bl=bl, interpret=interpret)
+    return match[:N, :M], valid[:N, :M]
+
+
+@functools.partial(jax.jit, static_argnames=("n_chars", "gap_code", "correct",
+                                             "bn", "bl", "interpret"))
+def distance_matrix_pallas(msa, *, n_chars: int, gap_code: int,
+                           correct: bool = True, bn: int = 128, bl: int = 128,
+                           interpret: bool = True):
+    match, valid = match_valid_pallas(msa, msa, n_chars=n_chars,
+                                      gap_code=gap_code, bn=bn, bl=bl,
+                                      interpret=interpret)
+    p = 1.0 - match / jnp.maximum(valid, 1.0)
+    p = jnp.where(valid > 0, p, 0.75)
+    d = jc69_distance(p) if correct else p
+    d = (d + d.T) / 2.0
+    return d * (1.0 - jnp.eye(d.shape[0]))

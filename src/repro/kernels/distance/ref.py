@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the distance kernel (delegates to core.distance)."""
+from __future__ import annotations
+
+from ...core.distance import match_valid_counts
+
+
+def match_valid_ref(msa_a, msa_b, *, n_chars: int, gap_code: int):
+    return match_valid_counts(msa_a, msa_b, gap_code=gap_code, n_chars=n_chars)

@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: blocked online-softmax attention (FlashAttention-2
+schedule), causal + sliding-window, GQA via head-index mapping.
+
+This is the perf-critical layer of the LM workloads (prefill_32k is
+attention-dominated). Grid = (batch, q_head, q_blocks, kv_blocks); the kv
+dimension is innermost (sequential on TPU), with the running max m, sum l and
+accumulator acc living in VMEM scratch across kv steps. Q/K/V tiles are
+(BQ, D) / (BK, D); scores (BQ, BK) stay in VMEM/VREGs. GQA never gathers:
+the K/V BlockSpec index_map divides the q-head index by the group size, so a
+KV head's tiles are streamed once per q-head group.
+
+Masking: causal and sliding-window are applied as position masks inside the
+tile; fully-masked tiles are skipped via the grid's kv upper bound being
+conservative (we still iterate but @pl.when(skip) avoids the FLOPs on TPU;
+interpret mode computes them — correctness identical).
+
+VMEM at BQ=BK=128, D=128: q/k/v tiles 3*64 KiB + acc 64 KiB + scores 64 KiB
+— well under budget; block sizes are the hillclimb's knobs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            bq: int, bk: int, scale: float, causal: bool, window: int):
+    qb = pl.program_id(2)
+    kb = pl.program_id(3)
+    n_kb = pl.num_programs(3)
+
+    @pl.when(kb == 0)
+    def _():
+        m_scr[:] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[:] = jnp.zeros_like(l_scr)
+        acc_scr[:, :] = jnp.zeros_like(acc_scr)
+
+    q_pos = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+
+    # block-level skip: with causal masking, kv blocks strictly above the
+    # diagonal contribute nothing
+    run = True
+    if causal:
+        run = (kb * bk) <= (qb * bq + bq - 1)
+
+    @pl.when(run)
+    def _():
+        q = q_ref[0, 0, :, :]
+        k = k_ref[0, 0, :, :]
+        v = v_ref[0, 0, :, :]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[:]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[:] = l_scr[:] * alpha + jnp.sum(p, axis=1)
+        acc_scr[:, :] = acc_scr[:, :] * alpha[:, None] + jax.lax.dot_general(
+            p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[:] = m_new
+
+    @pl.when(kb == n_kb - 1)
+    def _():
+        l = jnp.maximum(l_scr[:], 1e-30)
+        o_ref[0, 0, :, :] = (acc_scr[:, :] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, scale: float, causal: bool,
+                           window: int = 0, bq: int = 128, bk: int = 128,
+                           interpret: bool = True):
+    """q: (B, H, S, D), k/v: (B, KH, S, D) with H % KH == 0. S % bq == 0."""
+    B, H, S, D = q.shape
+    KH = k.shape[1]
+    assert H % KH == 0 and S % bq == 0 and S % bk == 0
+    group = H // KH
+    grid = (B, H, S // bq, S // bk)
+    kern = functools.partial(_kernel, bq=bq, bk=bk, scale=scale,
+                             causal=causal, window=window)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,40 @@
+"""jit'd wrapper with recompute-based VJP (forward = Pallas kernel).
+
+Training uses jax.custom_vjp: forward runs the kernel; backward recomputes
+attention with the jnp reference (memory-cheap forward, standard backward).
+A fused flash backward kernel is a known further optimization and is listed
+in EXPERIMENTS.md §Perf as future work for the TPU target.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_kernel import flash_attention_kernel
+from .ref import attention_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention(q, k, v, scale, causal=True, window=0, bq=128, bk=128,
+                    interpret=True):
+    return flash_attention_kernel(q, k, v, scale=scale, causal=causal,
+                                  window=window, bq=bq, bk=bk,
+                                  interpret=interpret)
+
+
+def _fwd(q, k, v, scale, causal, window, bq, bk, interpret):
+    out = flash_attention(q, k, v, scale, causal, window, bq, bk, interpret)
+    return out, (q, k, v)
+
+
+def _bwd(scale, causal, window, bq, bk, interpret, res, g):
+    q, k, v = res
+    def f(q, k, v):
+        return attention_ref(q, k, v, scale=scale, causal=causal, window=window)
+    _, vjp = jax.vjp(f, q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

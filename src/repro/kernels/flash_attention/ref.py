@@ -1,0 +1,26 @@
+"""Pure-jnp oracle: materialized-scores attention with the same masking."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, scale: float, causal: bool, window: int = 0):
+    B, H, S, D = q.shape
+    KH = k.shape[1]
+    group = H // KH
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= qp >= kp
+    if window > 0:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - jnp.max(s, -1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, -1, keepdims=True), 1e-30)
+    p = jnp.where(mask, p, 0.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,2 @@
+from .ops import gotoh_forward_pallas  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,39 @@
+"""jit'd public wrapper for the SW/Gotoh kernel: padding, boundary row,
+and a drop-in replacement for pairwise.gotoh_forward in batch form."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core.pairwise import ForwardResult
+from . import ref as _ref
+from .sw_kernel import gotoh_forward_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("gap_open", "gap_extend", "local",
+                                             "block_rows", "interpret"))
+def gotoh_forward_pallas(a, b, lens, sub, *, gap_open, gap_extend,
+                         local=False, block_rows: int = 128,
+                         interpret: bool = True) -> ForwardResult:
+    """Batched forward with the kernel; returns ForwardResult with the
+    boundary row prepended so core.pairwise.traceback consumes it directly.
+
+    a: (B, n) int8, b: (B, m) int8, lens: (B, 2) i32 [[la, lb], ...].
+    """
+    B, n = a.shape
+    m = b.shape[1]
+    npad = (-n) % block_rows
+    a = jnp.pad(a, ((0, 0), (0, npad)))
+    dirs_body, out = gotoh_forward_kernel(
+        a, b, lens, sub.astype(jnp.float32), gap_open=float(gap_open),
+        gap_extend=float(gap_extend), local=local, block_rows=block_rows,
+        interpret=interpret)
+    dirs_body = dirs_body[:, :n, :]
+    row0 = _ref.boundary_row(m, lens[:, 1])
+    dirs = jnp.concatenate([jnp.broadcast_to(row0, (B, 1, m + 1)), dirs_body],
+                           axis=1)
+    return ForwardResult(dirs, out[:, 0], out[:, 1].astype(jnp.int32),
+                         out[:, 2].astype(jnp.int32),
+                         out[:, 3].astype(jnp.int32))

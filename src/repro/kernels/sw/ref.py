@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the SW/Gotoh Pallas kernel: the row-scan forward from
+repro.core.pairwise, reshaped to the kernel's output contract."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core import pairwise
+
+
+def gotoh_forward_ref(a, b, lens, sub, *, gap_open: float, gap_extend: float,
+                      local: bool):
+    """Same contract as sw_kernel.gotoh_forward_kernel."""
+    def one(a_i, b_i, l_i):
+        fwd = pairwise.gotoh_forward(a_i, l_i[0], b_i, l_i[1], sub,
+                                     gap_open, gap_extend, local=local)
+        out = jnp.stack([fwd.score, fwd.start_i.astype(jnp.float32),
+                         fwd.start_j.astype(jnp.float32),
+                         fwd.start_state.astype(jnp.float32),
+                         0.0, 0.0, 0.0, 0.0])
+        return fwd.dirs[1:], out      # body rows only (kernel omits row 0)
+
+    return jax.vmap(one)(a, b, lens)
+
+
+def boundary_row(m: int, lb, *, gap_code_unused=None):
+    """Packed direction row 0 (constant given lb): FRESH | open-from-M at j=1."""
+    from ...core.pairwise import FRESH
+    dir_iy0 = jnp.where(jnp.arange(m + 1) == 1, 0, 1)
+    row0 = (jnp.full((m + 1,), FRESH, jnp.int32) | (dir_iy0 << 3)).astype(jnp.int8)
+    return row0

@@ -1,0 +1,178 @@
+"""Pallas TPU kernel: batched Gotoh DP forward (scores + packed directions).
+
+TPU adaptation of the paper's Smith-Waterman engine. The 2D DP is blocked by
+query rows: grid = (batch, row_blocks); the kernel keeps the previous DP row
+(M/Ix/Iy, each (m+1,) f32) in VMEM scratch that persists across the
+sequential row-block grid dimension, so HBM traffic is exactly one int8
+direction row per DP row (the score rows never leave VMEM). Within a row the
+horizontal affine-gap recurrence Iy[j] = max(M[j-1]-go, Iy[j-1]-ge) is
+re-expressed as a running max (cummax) over M[k]+k*ge — the same trick as the
+jnp oracle — so every row is pure vector work on the VPU with no
+sequential-in-j loop.
+
+Layout notes for the TPU target: columns (m+1) should be padded to a
+multiple of 128 (lane width) by ops.py; direction rows are int8 (packed
+2+1+1 bits); scratch is 3*(m+1)*4B + capture (3,(m+1)) + best (8,) — for
+m = 4k this is ~115 KiB, comfortably inside one core's VMEM alongside the
+(block_rows, m+1) int8 output tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ...core.pairwise import NEG, M_ST, IX_ST, IY_ST, FRESH
+
+
+def _row_update(m_prev, ix_prev, iy_prev, a_i, b_row, sub, go, ge, jcol,
+                local: bool):
+    """One DP row; mirrors pairwise.row_step (shared semantics, VMEM refs)."""
+    mcols = b_row.shape[0] + 1
+    s_row = sub[a_i.astype(jnp.int32), b_row.astype(jnp.int32)]
+    s_full = jnp.concatenate([jnp.zeros((1,), jnp.float32), s_row])
+
+    h_prev = jnp.maximum(m_prev, jnp.maximum(ix_prev, iy_prev))
+    amax = jnp.where(m_prev >= h_prev, M_ST,
+                     jnp.where(ix_prev >= h_prev, IX_ST, IY_ST))
+    h_diag = jnp.concatenate([jnp.full((1,), NEG, jnp.float32), h_prev[:-1]])
+    amax_diag = jnp.concatenate([jnp.full((1,), M_ST, amax.dtype), amax[:-1]])
+
+    m_new = h_diag + s_full
+    dir_m = amax_diag
+    if local:
+        fresh = h_diag <= 0.0
+        m_new = jnp.where(fresh, s_full, m_new)
+        dir_m = jnp.where(fresh, FRESH, dir_m)
+    m_new = m_new.at[0].set(NEG)
+
+    ix_open = m_prev - go
+    ix_ext = ix_prev - ge
+    ix_new = jnp.maximum(ix_open, ix_ext)
+    dir_ix = (ix_ext > ix_open).astype(jnp.int32)
+
+    cm = jax.lax.cummax(m_new + jcol * ge)
+    iy_new = jnp.concatenate(
+        [jnp.full((1,), NEG, jnp.float32), cm[:-1] - go - (jcol[1:] - 1.0) * ge])
+    m_left = jnp.concatenate([jnp.full((1,), NEG, jnp.float32), m_new[:-1]])
+    iy_left = jnp.concatenate([jnp.full((1,), NEG, jnp.float32), iy_new[:-1]])
+    dir_iy = (iy_left - ge > m_left - go).astype(jnp.int32)
+
+    packed = (dir_m.astype(jnp.int32) | (dir_ix << 2) | (dir_iy << 3)).astype(jnp.int8)
+    return m_new, ix_new, iy_new, packed
+
+
+def _kernel(a_ref, b_ref, lens_ref, sub_ref, dirs_ref, out_ref,
+            mp, xp, yp, cap, best, *, block_rows: int, local: bool,
+            gap_open: float, gap_extend: float):
+    rb = pl.program_id(1)
+    n_rb = pl.num_programs(1)
+    la = lens_ref[0, 0]
+    lb = lens_ref[0, 1]
+    b_row = b_ref[0, :]
+    mcols = b_row.shape[0] + 1
+    sub = sub_ref[:]
+    go = jnp.float32(gap_open)
+    ge = jnp.float32(gap_extend)
+    jcol = jnp.arange(mcols, dtype=jnp.float32)
+    col_ok = jnp.arange(mcols) <= lb
+
+    @pl.when(rb == 0)
+    def _init():
+        m0 = jnp.full((mcols,), NEG, jnp.float32).at[0].set(0.0)
+        ix0 = jnp.full((mcols,), NEG, jnp.float32)
+        iy0 = jnp.where(jnp.arange(mcols) >= 1, -(go + (jcol - 1.0) * ge), NEG)
+        mp[:] = m0
+        xp[:] = ix0
+        yp[:] = iy0
+        cap[0, :] = m0
+        cap[1, :] = ix0
+        cap[2, :] = iy0
+        best[:] = jnp.where(jnp.arange(8) == 0, jnp.float32(NEG), 0.0)
+
+    def row(l, _):
+        r = rb * block_rows + l + 1          # DP row index (1-based)
+        a_i = a_ref[0, l]
+        m_new, ix_new, iy_new, packed = _row_update(
+            mp[:], xp[:], yp[:], a_i, b_row, sub, go, ge, jcol, local)
+        dirs_ref[0, l, :] = packed
+        live = r <= la
+        mp[:] = jnp.where(live, m_new, mp[:])
+        xp[:] = jnp.where(live, ix_new, xp[:])
+        yp[:] = jnp.where(live, iy_new, yp[:])
+        hit = r == la
+        cap[0, :] = jnp.where(hit, m_new, cap[0, :])
+        cap[1, :] = jnp.where(hit, ix_new, cap[1, :])
+        cap[2, :] = jnp.where(hit, iy_new, cap[2, :])
+        if local:
+            row_masked = jnp.where(col_ok & live, m_new, NEG)
+            jb = jnp.argmax(row_masked)
+            vb = row_masked[jb]
+            upd = vb > best[0]
+            best[0] = jnp.where(upd, vb, best[0])
+            best[1] = jnp.where(upd, r.astype(jnp.float32), best[1])
+            best[2] = jnp.where(upd, jb.astype(jnp.float32), best[2])
+        return 0
+
+    jax.lax.fori_loop(0, block_rows, row, 0)
+
+    @pl.when(rb == n_rb - 1)
+    def _fin():
+        if local:
+            out_ref[0, 0] = best[0]
+            out_ref[0, 1] = best[1]
+            out_ref[0, 2] = best[2]
+            out_ref[0, 3] = jnp.float32(M_ST)
+        else:
+            ends = jnp.stack([cap[0, lb], cap[1, lb], cap[2, lb]])
+            st = jnp.argmax(ends)
+            out_ref[0, 0] = ends[st]
+            out_ref[0, 1] = la.astype(jnp.float32)
+            out_ref[0, 2] = lb.astype(jnp.float32)
+            out_ref[0, 3] = st.astype(jnp.float32)
+        out_ref[0, 4:] = jnp.zeros((4,), jnp.float32)
+
+
+def gotoh_forward_kernel(a, b, lens, sub, *, gap_open: float,
+                         gap_extend: float, local: bool,
+                         block_rows: int = 128, interpret: bool = True):
+    """a: (B, n) int8 (n % block_rows == 0), b: (B, m), lens: (B, 2) i32.
+
+    Returns dirs_body (B, n, m+1) int8 (DP rows 1..n) and out (B, 8) f32
+    [score, start_i, start_j, start_state, 0*4].
+    """
+    B, n = a.shape
+    m = b.shape[1]
+    assert n % block_rows == 0, (n, block_rows)
+    grid = (B, n // block_rows)
+    kern = functools.partial(_kernel, block_rows=block_rows, local=local,
+                             gap_open=gap_open, gap_extend=gap_extend)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_rows), lambda b_, r: (b_, r)),
+            pl.BlockSpec((1, m), lambda b_, r: (b_, 0)),
+            pl.BlockSpec((1, 2), lambda b_, r: (b_, 0)),
+            pl.BlockSpec(sub.shape, lambda b_, r: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_rows, m + 1), lambda b_, r: (b_, r, 0)),
+            pl.BlockSpec((1, 8), lambda b_, r: (b_, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n, m + 1), jnp.int8),
+            jax.ShapeDtypeStruct((B, 8), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((m + 1,), jnp.float32),
+            pltpu.VMEM((m + 1,), jnp.float32),
+            pltpu.VMEM((m + 1,), jnp.float32),
+            pltpu.VMEM((3, m + 1), jnp.float32),
+            pltpu.VMEM((8,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, b, lens, sub)

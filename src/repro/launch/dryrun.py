@@ -1,0 +1,212 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+meshes, record memory_analysis / cost_analysis / collective bytes.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma-2b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+  python -m repro.launch.dryrun --msa halign-dna-1000x --mesh multipod
+
+The FIRST TWO LINES of this file force 512 host platform devices before any
+jax initialization — do not import repro.launch.dryrun from code that needs
+the real device count.
+"""
+import argparse
+import json
+import re
+import time
+from pathlib import Path
+
+import jax
+
+from ..configs import ALL_ARCHS, SHAPES, get_arch, shape_applicable
+from .mesh import make_production_mesh
+from .steps import MSA_CELLS, build_msa_step, build_step, microbatches_for
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64)"
+                       r"\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str):
+    """Sum operand bytes of every collective op in the (post-SPMD) HLO.
+
+    Returns (totals_by_op, counts_by_op, per_computation_totals). HLO prints
+    each while body ONCE regardless of trip count, so per-computation totals
+    let benchmarks/roofline.py apply the known scan multipliers
+    (microbatches x layer groups) — see EXPERIMENTS.md §Roofline for the
+    validation of that correction against an unrolled compile.
+    """
+    out = {op: 0 for op in COLLECTIVE_OPS}
+    counts = {op: 0 for op in COLLECTIVE_OPS}
+    per_comp = {}
+    comp = "<entry>"
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if (ls.startswith("%") or ls.startswith("ENTRY")) and ls.endswith("{"):
+            comp = ls.split()[0].lstrip("%").split("(")[0].rstrip(".")
+        for op in COLLECTIVE_OPS:
+            if f" {op}(" in line or f" {op}-start(" in line:
+                try:
+                    operands = line.split("(", 1)[1]
+                except IndexError:
+                    continue
+                b = sum(_shape_bytes(m.group(1), m.group(2))
+                        for m in _SHAPE_RE.finditer(operands))
+                out[op] += b
+                counts[op] += 1
+                per_comp.setdefault(comp, 0)
+                per_comp[comp] += b
+                break
+    return out, counts, per_comp
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, verbose: bool = True,
+             roofline: bool = False):
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    cfg = get_arch(arch).config
+    ok, why = shape_applicable(cfg, SHAPES[shape])
+    if not ok:
+        return {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                "skipped": why}
+    t0 = time.time()
+    with mesh:
+        jitted, args = build_step(arch, shape, mesh, roofline=roofline)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        hlo = compiled.as_text()
+    coll, coll_n, coll_comp = collective_bytes(hlo)
+    rec = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind,
+        "roofline_mode": roofline,
+        "microbatches": (microbatches_for(arch, shape, mesh)
+                         if SHAPES[shape].kind == "train" else 1),
+        "flops_per_device": float(cost.get("flops", -1)) if cost else -1,
+        "bytes_accessed_per_device": float(cost.get("bytes accessed", -1))
+        if cost else -1,
+        "collective_bytes_per_device": coll,
+        "collective_counts": coll_n,
+        "collective_bytes_by_computation": coll_comp,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+    }
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes"):
+        if mem is not None and hasattr(mem, attr):
+            rec[attr] = int(getattr(mem, attr))
+    if verbose:
+        print(json.dumps(rec))
+    return rec
+
+
+def run_msa_cell(cell: str, mesh_kind: str, verbose: bool = True):
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    t0 = time.time()
+    with mesh:
+        fn, args = build_msa_step(cell, mesh)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        hlo = compiled.as_text()
+    coll, coll_n, coll_comp = collective_bytes(hlo)
+    rec = {
+        "arch": cell, "shape": "msa", "mesh": mesh_kind,
+        "flops_per_device": float(cost.get("flops", -1)) if cost else -1,
+        "bytes_accessed_per_device": float(cost.get("bytes accessed", -1))
+        if cost else -1,
+        "collective_bytes_per_device": coll,
+        "collective_counts": coll_n,
+        "collective_bytes_by_computation": coll_comp,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+    }
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes"):
+        if mem is not None and hasattr(mem, attr):
+            rec[attr] = int(getattr(mem, attr))
+    if verbose:
+        print(json.dumps(rec))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--msa", default=None, choices=list(MSA_CELLS) + [None])
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--roofline", action="store_true",
+                    help="unroll layer scans so cost_analysis counts every "
+                         "layer (single-pod roofline lowering)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    results = []
+    if args.msa:
+        for mk in meshes:
+            results.append(run_msa_cell(args.msa, mk))
+    elif args.all:
+        for arch in ALL_ARCHS:
+            for shape in SHAPES:
+                for mk in meshes:
+                    try:
+                        results.append(run_cell(arch, shape, mk,
+                                                roofline=args.roofline))
+                    except Exception as e:  # a failure here is a bug: record it
+                        results.append({"arch": arch, "shape": shape,
+                                        "mesh": mk, "error": repr(e)})
+                        print(f"FAIL {arch} {shape} {mk}: {e!r}")
+        for cell in MSA_CELLS:
+            for mk in meshes:
+                try:
+                    results.append(run_msa_cell(cell, mk))
+                except Exception as e:
+                    results.append({"arch": cell, "shape": "msa", "mesh": mk,
+                                    "error": repr(e)})
+                    print(f"FAIL {cell} {mk}: {e!r}")
+    else:
+        for mk in meshes:
+            results.append(run_cell(args.arch, args.shape, mk,
+                                    roofline=args.roofline))
+
+    if args.out:
+        out = Path(args.out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {len(results)} records to {out}")
+
+
+if __name__ == "__main__":
+    main()

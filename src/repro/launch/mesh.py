@@ -1,0 +1,33 @@
+"""Production meshes. Importing this module never touches jax device state —
+meshes are built inside functions only (dryrun.py sets the 512-device
+XLA_FLAGS before any jax import)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 v5e pod (data, model) or 2 pods = 512 chips (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — run under "
+            f"launch/dryrun.py which forces 512 host devices")
+    import numpy as np
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)
+
+
+def make_local_mesh(shape=(1, 1), axes=("data", "model")):
+    """Small mesh over however many real devices exist (tests, examples)."""
+    import numpy as np
+    n = 1
+    for s in shape:
+        n *= s
+    dev = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)

@@ -1,0 +1,102 @@
+"""LM training launcher with the full resilience stack: sharded state,
+microbatched steps, async atomic checkpoints, failure replay, elastic
+restore. Scaled to whatever devices exist (1 CPU here; a pod in prod).
+
+  PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --steps 100 \
+      --batch 8 --seq 128 --ckpt-dir ckpt/ [--smoke] [--resume]
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--micro", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config (CPU-friendly)")
+    ap.add_argument("--mesh", default="1x1",
+                    help="data x model, e.g. 4x2 (needs that many devices)")
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from ..configs import get_arch
+    from ..dist.checkpoint import CheckpointManager
+    from ..dist.fault import ResilientLoop
+    from ..launch.mesh import make_local_mesh
+    from ..models import sharding_plan as sp
+    from ..train import optimizer as opt
+    from ..train.optimizer import AdamWConfig
+    from ..train.train_step import TrainState, init_state, make_train_step
+
+    spec = get_arch(args.arch)
+    cfg = spec.smoke if args.smoke else spec.config
+    d, m = (int(x) for x in args.mesh.split("x"))
+    mesh = make_local_mesh((d, m), ("data", "model"))
+
+    key = jax.random.PRNGKey(0)
+    state_shape = jax.eval_shape(functools.partial(init_state, cfg), key)
+    pspecs = sp.params_pspecs(state_shape.params, mesh)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                       is_leaf=lambda x: isinstance(x, P))
+    state_sh = TrainState(params=psh,
+                          opt=opt.OptState(m=psh, v=psh,
+                                           count=NamedSharding(mesh, P())),
+                          step=NamedSharding(mesh, P()))
+    shard_fns = sp.make_shard_fns(cfg, mesh, args.batch)
+    step_fn = make_train_step(cfg, AdamWConfig(lr=args.lr),
+                              microbatches=args.micro, shard_fns=shard_fns)
+    jitted = jax.jit(step_fn, in_shardings=(state_sh, None),
+                     out_shardings=(state_sh, None))
+
+    state = jax.device_put(init_state(cfg, key), state_sh)
+
+    def batches(step):
+        k = jax.random.PRNGKey(step)
+        toks = jax.random.randint(k, (args.batch, args.seq), 0,
+                                  cfg.vocab_size)
+        return {"tokens": toks, "labels": toks}
+
+    last = {"m": None}
+
+    def step_and_log(st, batch):
+        st, metrics = jitted(st, batch)
+        last["m"] = metrics
+        return st
+
+    t0 = time.time()
+    if args.ckpt_dir:
+        cm = CheckpointManager(args.ckpt_dir, keep=3)
+        loop = ResilientLoop(step_and_log, cm, ckpt_every=args.ckpt_every)
+
+        class B:
+            n_steps = args.steps
+
+            def __call__(self, s):
+                return batches(s)
+        state, steps = loop.run(state, B())
+    else:
+        for s in range(args.steps):
+            state = step_and_log(state, batches(s))
+        steps = args.steps
+    dt = time.time() - t0
+    m = jax.tree.map(float, last["m"])
+    print(f"done: {steps} steps in {dt:.1f}s "
+          f"({dt / max(steps, 1) * 1e3:.0f} ms/step) loss={m['loss']:.4f} "
+          f"grad_norm={m['grad_norm']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

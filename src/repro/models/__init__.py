@@ -1,0 +1,2 @@
+from . import layers, mamba2, transformer  # noqa: F401
+from .transformer import init_params, apply_model  # noqa: F401

@@ -1,0 +1,260 @@
+"""Shared NN layers: RMSNorm, RoPE / M-RoPE, GQA attention (XLA-flash with
+online softmax over KV chunks), SWA, gated MLPs, capacity-based top-k MoE.
+
+Everything is a pure function over explicit param pytrees; sharding enters
+only through the ``shard_fns`` callbacks the planner injects (identity on a
+single device), so the same code runs smoke tests, the 512-way dry-run and a
+real pod.
+
+Attention strategy: scores are never materialized at (S, S). Training and
+prefill run a lax.scan over KV chunks carrying online-softmax stats (m, l,
+acc) — the FlashAttention recurrence expressed in XLA, which is what makes
+prefill_32k compile with sane per-device memory on any backend; the Pallas
+kernel (repro.kernels.flash_attention) implements the same schedule for the
+TPU target and is switchable via ``attn_impl='pallas'``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+ShardFns = Dict[str, Callable]
+
+DEFAULT_SHARD_FNS: ShardFns = {}
+
+
+def shard(shard_fns: Optional[ShardFns], name: str, x):
+    if shard_fns and name in shard_fns:
+        return shard_fns[name](x)
+    return x
+
+
+def rms_norm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+# ------------------------------------------------------------------- RoPE
+
+def _rope_angles(positions, head_dim: int, theta: float):
+    """positions: (..., S) -> cos/sin (..., S, head_dim/2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, D) rotated pairwise-half style; positions: (B, S)."""
+    half = x.shape[-1] // 2
+    cos, sin = _rope_angles(positions, x.shape[-1], theta)   # (B, S, half)
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1).astype(x.dtype)
+
+
+def apply_m_rope(x, positions3, sections: Tuple[int, int, int], theta: float):
+    """Multimodal RoPE (qwen2-vl): head_dim/2 split into (t, h, w) sections,
+    each rotated by its own position stream. positions3: (3, B, S)."""
+    half = x.shape[-1] // 2
+    cs, ss = [], []
+    for pos, sec in zip(positions3, sections):
+        c, s = _rope_angles(pos, 2 * sec, theta)     # (B, S, sec)
+        cs.append(c)
+        ss.append(s)
+    cos = jnp.concatenate(cs, axis=-1)[:, :, None, :]
+    sin = jnp.concatenate(ss, axis=-1)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1).astype(x.dtype)
+
+
+# -------------------------------------------------------------- attention
+
+def xla_flash(q, k, v, *, scale: float, causal: bool, window: int,
+              q_offset=0, kv_chunk: int = 1024):
+    """Online-softmax attention, scores blocked over KV.
+
+    q: (B, S, H, D); k/v: (B, T, KH, D). Returns (B, S, H, D).
+    q_offset: absolute position of q[0] (prefill continuation support).
+    """
+    B, S, H, D = q.shape
+    T, KH = k.shape[1], k.shape[2]
+    g = H // KH
+    qg = q.reshape(B, S, KH, g, D)
+    kv_chunk = min(kv_chunk, T)
+    pad = (-T) % kv_chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nC = (T + pad) // kv_chunk
+    kc = k.reshape(B, nC, kv_chunk, KH, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nC, kv_chunk, KH, D).transpose(1, 0, 2, 3, 4)
+
+    q_pos = q_offset + jnp.arange(S)
+
+    def step(carry, xs):
+        m, l, acc, ci = carry
+        kb, vb = xs
+        k_pos = ci * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.einsum("bskgd,btkd->bskgt", qg.astype(jnp.float32),
+                       kb.astype(jnp.float32)) * scale
+        mask = k_pos[None, :] < T  # drop padding
+        if causal:
+            mask = mask & (q_pos[:, None] >= k_pos[None, :])
+        if window > 0:
+            mask = mask & ((q_pos[:, None] - k_pos[None, :]) < window)
+        s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask[None, :, None, None, :], p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bskgt,btkd->bskgd", p, vb.astype(jnp.float32))
+        acc = acc * alpha[..., None] + pv
+        return (m_new, l, acc, ci + 1), None
+
+    m0 = jnp.full((B, S, KH, g), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, S, KH, g), jnp.float32)
+    acc0 = jnp.zeros((B, S, KH, g, D), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(step, (m0, l0, acc0, jnp.int32(0)), (kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, slot_pos, cur_pos, *, scale: float,
+                     window: int):
+    """Single-token attention over a (ring-buffer) cache.
+
+    q: (B, 1, H, D); caches: (B, W, KH, D); slot_pos: (B, W) absolute
+    positions (-1 = empty); cur_pos: (B,).
+    """
+    B, _, H, D = q.shape
+    W, KH = k_cache.shape[1], k_cache.shape[2]
+    g = H // KH
+    qg = q.reshape(B, KH, g, D)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    mask = (slot_pos >= 0) & (slot_pos <= cur_pos[:, None])
+    if window > 0:
+        mask = mask & ((cur_pos[:, None] - slot_pos) < window)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[:, None, None, :], p, 0.0)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def attention_block(params: Params, x, positions, cfg, shard_fns,
+                    cache: Optional[Params] = None, pos3=None):
+    """Full attention sub-layer (pre-norm residual outside).
+
+    Returns (out, new_cache). In cache mode x is (B, 1, D).
+    """
+    B, S, D = x.shape
+    H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+
+    def proj(w, b, n):
+        y = x @ w.astype(dt)
+        if b is not None:
+            y = y + b.astype(dt)
+        return y.reshape(B, S, n, hd)
+
+    q = proj(params["wq"], params.get("bq"), H)
+    k = proj(params["wk"], params.get("bk"), KH)
+    v = proj(params["wv"], params.get("bv"), KH)
+
+    if cfg.m_rope and pos3 is not None:
+        q = apply_m_rope(q, pos3, cfg.m_rope_sections, cfg.rope_theta)
+        k = apply_m_rope(k, pos3, cfg.m_rope_sections, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard(shard_fns, "attn_q", q)
+    k = shard(shard_fns, "attn_kv", k)
+    v = shard(shard_fns, "attn_kv", v)
+
+    scale = 1.0 / math.sqrt(hd)
+    new_cache = None
+    if cache is not None:
+        W = cache["k"].shape[1]
+        slot = (positions[:, 0] % W).astype(jnp.int32)       # (B,)
+        bidx = jnp.arange(B)
+        kc = cache["k"].at[bidx, slot].set(k[:, 0])
+        vc = cache["v"].at[bidx, slot].set(v[:, 0])
+        sp = cache["slot_pos"].at[bidx, slot].set(positions[:, 0])
+        out = decode_attention(q, kc, vc, sp, positions[:, 0], scale=scale,
+                               window=cfg.sliding_window)
+        new_cache = {"k": kc, "v": vc, "slot_pos": sp}
+    else:
+        out = xla_flash(q, k, v, scale=scale, causal=cfg.causal,
+                        window=cfg.sliding_window)
+    out = out.reshape(B, S, H * hd)
+    return out @ params["wo"].astype(dt), new_cache
+
+
+# ------------------------------------------------------------------- MLPs
+
+def mlp_block(params: Params, x, kind: str, shard_fns=None):
+    dt = x.dtype
+    gate = shard(shard_fns, "mlp_hidden", x @ params["w_gate"].astype(dt))
+    up = shard(shard_fns, "mlp_hidden", x @ params["w_up"].astype(dt))
+    act = jax.nn.gelu(gate) if kind == "geglu" else jax.nn.silu(gate)
+    return (act * up) @ params["w_down"].astype(dt)
+
+
+def moe_block(params: Params, x, cfg, shard_fns):
+    """Capacity-based top-k MoE (Switch/MaxText dispatch), expert-parallel.
+
+    x: (B, S, D) -> (y, aux_loss). Dispatch/combine are one-hot einsums; the
+    (T, E, C) tensors are the documented memory driver — microbatching keeps
+    T small (see EXPERIMENTS §Perf).
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    T = B * S
+    xt = x.reshape(T, D)
+    logits = (xt.astype(jnp.float32) @ params["router"].astype(jnp.float32))
+    gates_all = jax.nn.softmax(logits, axis=-1)              # (T, E)
+    gate_vals, idx = jax.lax.top_k(gates_all, K)             # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    C = int(max(4, math.ceil(T * K / E * cfg.capacity_factor)))
+    C = min(C, T)
+    onehot_e = jax.nn.one_hot(idx, E, dtype=jnp.float32)     # (T, K, E)
+    # position of each assignment within its expert queue
+    flat = onehot_e.reshape(T * K, E)
+    pos = jnp.cumsum(flat, axis=0) * flat                    # (T*K, E)
+    pos_tk = jnp.max(pos.reshape(T, K, E), axis=-1) - 1.0    # (T, K)
+    keep = (pos_tk >= 0) & (pos_tk < C)
+    onehot_c = jax.nn.one_hot(pos_tk.astype(jnp.int32), C,
+                              dtype=jnp.float32) * keep[..., None]
+    dispatch = jnp.einsum("tke,tkc->tec", onehot_e, onehot_c)  # (T, E, C)
+    dispatch = shard(shard_fns, "moe_dispatch", dispatch)
+
+    xe = jnp.einsum("td,tec->ecd", xt.astype(jnp.float32), dispatch)
+    xe = shard(shard_fns, "moe_xe", xe).astype(x.dtype)
+    gate_h = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"].astype(x.dtype))
+    up_h = jnp.einsum("ecd,edf->ecf", xe, params["w_up"].astype(x.dtype))
+    act = jax.nn.gelu(gate_h) if cfg.mlp == "geglu" else jax.nn.silu(gate_h)
+    ye = jnp.einsum("ecf,efd->ecd", act * up_h,
+                    params["w_down"].astype(x.dtype))
+    ye = shard(shard_fns, "moe_xe", ye)
+    combine = jnp.einsum("tke,tkc,tk->tec", onehot_e, onehot_c, gate_vals)
+    y = jnp.einsum("tec,ecd->td", combine, ye.astype(jnp.float32))
+
+    # load-balancing aux loss (Switch): E * mean(frac_tokens * mean_prob)
+    frac = jnp.mean(onehot_e.sum(axis=1), axis=0)            # (E,)
+    prob = jnp.mean(gates_all, axis=0)
+    aux = E * jnp.sum(frac * prob)
+    return y.reshape(B, S, D).astype(x.dtype), aux

@@ -1,0 +1,170 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) blocks.
+
+The SSD algorithm is itself the TPU-friendly formulation of a selective
+scan: the sequence is chunked; within a chunk the recurrence is the
+*quadratic attention-like* form (one (Q, Q) masked matmul per chunk — MXU
+work); across chunks only the (heads, head_dim, state) states are carried by
+a short lax.scan. This mirrors the center-star DP blocking in the paper's
+kernel: sequential dependency compressed to a small carried state, bulk work
+as dense tiles. ngroups = 1 (B/C shared across heads).
+
+Decode is the O(1) recurrent update: h' = h * exp(dt*A) + dt * (B ⊗ x).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def _conv1d_causal(x, w, state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv. x: (B, S, C), w: (K, C). With ``state``
+    ((B, K-1, C), decode) returns (y, new_state)."""
+    K = w.shape[0]
+    if state is not None:
+        xs = jnp.concatenate([state, x], axis=1)             # (B, K-1+S, C)
+        new_state = xs[:, -(K - 1):, :]
+    else:
+        xs = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+        new_state = None
+    y = sum(xs[:, i: xs.shape[1] - (K - 1 - i), :] * w[i] for i in range(K))
+    return y, new_state
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, *, chunk: int = 128,
+                h0: Optional[jnp.ndarray] = None):
+    """SSD forward.
+
+    x: (B, S, nh, hp); dt: (B, S, nh) (post-softplus); A: (nh,) negative;
+    Bm/Cm: (B, S, st). Returns (y, h_last) with h: (B, nh, hp, st).
+    """
+    Bsz, S, nh, hp = x.shape
+    st = Bm.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    S_p = S + pad
+    nc = S_p // chunk
+
+    def r(t, shape):  # reshape into chunks
+        return t.reshape((Bsz, nc, chunk) + shape)
+    xc = r(x, (nh, hp))
+    dtc = r(dt, (nh,))
+    Bc = r(Bm, (st,))
+    Cc = r(Cm, (st,))
+
+    dA = dtc * A[None, None, None, :]                        # (B,nc,Q,nh) <= 0
+    cs = jnp.cumsum(dA, axis=2)                              # within-chunk
+    total = cs[:, :, -1:, :]                                 # (B,nc,1,nh)
+
+    # intra-chunk (quadratic form): y_i += sum_{j<=i} (C_i.B_j) e^{cs_i-cs_j} dt_j x_j
+    CB = jnp.einsum("bnis,bnjs->bnij", Cc, Bc)               # (B,nc,Q,Q)
+    decay = jnp.exp(cs[:, :, :, None, :] - cs[:, :, None, :, :])  # (B,nc,i,j,nh)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(mask[None, None, :, :, None], decay, 0.0)
+    y_intra = jnp.einsum("bnij,bnijh,bnjh,bnjhp->bnihp",
+                         CB, L, dtc, xc.astype(jnp.float32))
+
+    # chunk states: S_n = sum_j B_j ⊗ (dt_j x_j) e^{cs_end - cs_j}
+    w = jnp.exp(total - cs) * dtc                            # (B,nc,Q,nh)
+    states = jnp.einsum("bnjs,bnjh,bnjhp->bnhps", Bc, w,
+                        xc.astype(jnp.float32))              # (B,nc,nh,hp,st)
+
+    # inter-chunk recurrence
+    gamma = jnp.exp(total[:, :, 0, :])                       # (B,nc,nh)
+
+    def step(h, xs):
+        g, s = xs                                            # g: (B,nh), s: (B,nh,hp,st)
+        h_new = h * g[:, :, None, None] + s
+        return h_new, h                                      # emit h_prev
+
+    h_init = h0 if h0 is not None else jnp.zeros(
+        (Bsz, nh, hp, st), jnp.float32)
+    h_last, h_prevs = jax.lax.scan(
+        step, h_init, (gamma.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)               # (B,nc,nh,hp,st)
+
+    # inter-chunk contribution: y_i += (C_i . h_prev) * e^{cs_i}
+    y_inter = jnp.einsum("bnis,bnih,bnhps->bnihp", Cc, jnp.exp(cs), h_prevs)
+    y = (y_intra + y_inter).reshape(Bsz, S_p, nh, hp)[:, :S]
+    return y.astype(x.dtype), h_last
+
+
+def mamba2_block(params: Params, x, cfg, shard_fns=None,
+                 cache: Optional[Params] = None):
+    """Full Mamba2 mixer. x: (B, S, D); cache: {'conv': (B,K-1,C), 'ssm': h}.
+
+    Returns (out, new_cache)."""
+    from .layers import rms_norm, shard
+    B, S, D = x.shape
+    di, st, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hp = cfg.ssm_head_dim
+    dt_ = x.dtype
+
+    zxbcdt = x @ params["in_proj"].astype(dt_)
+    z, xin, Bm, Cm, dt_raw = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + st, 2 * di + 2 * st], axis=-1)
+
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    conv_out, new_conv = _conv1d_causal(conv_in, params["conv_w"].astype(dt_),
+                                        conv_state)
+    conv_out = jax.nn.silu(conv_out + params["conv_b"].astype(dt_))
+    xin, Bm, Cm = jnp.split(conv_out, [di, di + st], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xin.reshape(B, S, nh, hp)
+    xh = shard(shard_fns, "ssm_x", xh)
+
+    if cache is not None:
+        # O(1) recurrent decode step
+        h = cache["ssm"]                                      # (B,nh,hp,st)
+        dt1 = dt[:, 0]                                        # (B,nh)
+        g = jnp.exp(dt1 * A[None, :])
+        upd = jnp.einsum("bs,bh,bhp->bhps", Bm[:, 0].astype(jnp.float32),
+                         dt1, xh[:, 0].astype(jnp.float32))
+        h_new = h * g[:, :, None, None] + upd
+        y = jnp.einsum("bs,bhps->bhp", Cm[:, 0].astype(jnp.float32), h_new)
+        y = y.reshape(B, 1, nh, hp)
+        new_cache = {"conv": new_conv, "ssm": h_new}
+    else:
+        y, h_last = ssd_chunked(xh, dt, A, Bm.astype(jnp.float32),
+                                Cm.astype(jnp.float32))
+        new_cache = None
+
+    y = y.astype(dt_) + xh * params["D"].astype(dt_)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = rms_norm(y, params["norm"], cfg.rms_eps) * jax.nn.silu(z)
+    out = y @ params["out_proj"].astype(dt_)
+    return out, new_cache
+
+
+def init_mamba2_params(key, cfg, dtype=jnp.float32) -> Params:
+    di, st, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    D = cfg.d_model
+    conv_dim = di + 2 * st
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * di + 2 * st + nh
+    scale = 1.0 / jnp.sqrt(D)
+    return {
+        "in_proj": (jax.random.normal(ks[0], (D, proj_out), dtype) * scale),
+        "conv_w": jax.random.normal(ks[1], (cfg.d_conv, conv_dim), dtype) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (nh,),
+                                       minval=jnp.log(1e-3),
+                                       maxval=jnp.log(1e-1))))).astype(dtype),
+        "A_log": jnp.log(1.0 + jax.random.uniform(ks[3], (nh,)) * 15.0
+                         ).astype(dtype),
+        "D": jnp.ones((nh,), dtype),
+        "norm": jnp.zeros((di,), dtype),
+        "out_proj": jax.random.normal(ks[0], (di, D), dtype) / jnp.sqrt(di),
+    }

@@ -1,0 +1,341 @@
+"""Composable decoder/encoder LM covering the whole zoo, scan-over-layers.
+
+Layers are grouped into a repeating *pattern* (dense archs: 1 layer; jamba:
+8 sub-layers with 1 attention + MoE every other) and the pattern is scanned
+with stacked params — one pattern's HLO regardless of depth, which is what
+keeps 61-layer/1T-param dry-runs compilable and lets XLA pipeline per-layer
+FSDP all-gathers against compute. KV/SSM caches ride the scan as xs/ys.
+
+Modes: train (no cache), prefill (full sequence + cache build), decode (one
+token + cache update). Param/optimizer sharding is decided by
+repro.models.sharding_plan; this module only calls the injected shard_fns.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, mamba2
+from .layers import shard
+
+Params = Dict[str, Any]
+
+
+def group_pattern(cfg) -> List[str]:
+    if cfg.family == "ssm":
+        return ["mamba_only"]
+    size = cfg.attn_period if cfg.is_hybrid else 1
+    start = cfg.first_dense
+    return [cfg.layer_kind(start + i) for i in range(size)]
+
+
+def n_groups(cfg) -> int:
+    size = len(group_pattern(cfg))
+    return (cfg.n_layers - cfg.first_dense) // size
+
+
+# ------------------------------------------------------------------- init
+
+def _init_attn(key, cfg, dtype):
+    D, H, KH, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = 1.0 / jnp.sqrt(D)
+    p = {
+        "wq": jax.random.normal(ks[0], (D, H * hd), dtype) * s,
+        "wk": jax.random.normal(ks[1], (D, KH * hd), dtype) * s,
+        "wv": jax.random.normal(ks[2], (D, KH * hd), dtype) * s,
+        "wo": jax.random.normal(ks[3], (H * hd, D), dtype) / jnp.sqrt(H * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KH * hd,), dtype)
+        p["bv"] = jnp.zeros((KH * hd,), dtype)
+    return p
+
+
+def _init_mlp(key, cfg, dtype, ff: int):
+    D = cfg.d_model
+    ks = jax.random.split(key, 3)
+    s = 1.0 / jnp.sqrt(D)
+    return {
+        "w_gate": jax.random.normal(ks[0], (D, ff), dtype) * s,
+        "w_up": jax.random.normal(ks[1], (D, ff), dtype) * s,
+        "w_down": jax.random.normal(ks[2], (ff, D), dtype) / jnp.sqrt(ff),
+    }
+
+
+def _init_moe(key, cfg, dtype):
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    s = 1.0 / jnp.sqrt(D)
+    return {
+        "router": jax.random.normal(ks[0], (D, E), dtype) * s,
+        "w_gate": jax.random.normal(ks[1], (E, D, F), dtype) * s,
+        "w_up": jax.random.normal(ks[2], (E, D, F), dtype) * s,
+        "w_down": jax.random.normal(ks[3], (E, F, D), dtype) / jnp.sqrt(F),
+    }
+
+
+def _init_block(key, kind: str, cfg, dtype, dense_ff: Optional[int] = None):
+    D = cfg.d_model
+    ks = jax.random.split(key, 3)
+    p: Params = {"norm1": jnp.zeros((D,), dtype)}
+    if kind.startswith("attn"):
+        p["attn"] = _init_attn(ks[0], cfg, dtype)
+    else:
+        p["mamba"] = mamba2.init_mamba2_params(ks[0], cfg, dtype)
+    if kind == "mamba_only":
+        return p
+    p["norm2"] = jnp.zeros((D,), dtype)
+    if kind.endswith("_moe"):
+        p["moe"] = _init_moe(ks[1], cfg, dtype)
+    else:
+        ff = dense_ff or cfg.d_ff_dense or cfg.d_ff
+        p["mlp"] = _init_mlp(ks[1], cfg, dtype, ff)
+    return p
+
+
+def init_params(cfg, key, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 5)
+    D, V = cfg.d_model, cfg.vocab_size
+    p: Params = {}
+    if cfg.embed_input:
+        p["embed"] = jax.random.normal(ks[0], (V, D), dtype) * 0.02
+    pattern = group_pattern(cfg)
+    ng = n_groups(cfg)
+
+    def one_group(k):
+        sub = jax.random.split(k, len(pattern))
+        return {f"l{i}": _init_block(sub[i], kind, cfg, dtype)
+                for i, kind in enumerate(pattern)}
+
+    p["blocks"] = jax.vmap(one_group)(jax.random.split(ks[1], ng))
+    if cfg.first_dense:
+        p["prefix"] = jax.vmap(
+            lambda k: {"l0": _init_block(k, "attn", cfg, dtype,
+                                         dense_ff=cfg.d_ff_dense or cfg.d_ff)}
+        )(jax.random.split(ks[2], cfg.first_dense))
+    p["final_norm"] = jnp.zeros((D,), dtype)
+    if not cfg.tie_embeddings:
+        p["head"] = jax.random.normal(ks[3], (D, V), dtype) * 0.02
+    return p
+
+
+# ------------------------------------------------------------------ cache
+
+def init_cache(cfg, batch_size: int, max_len: int, dtype=jnp.bfloat16) -> Params:
+    KH, hd = cfg.n_kv_heads, cfg.head_dim
+    W = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+
+    def attn_cache():
+        return {"k": jnp.zeros((batch_size, W, KH, hd), dtype),
+                "v": jnp.zeros((batch_size, W, KH, hd), dtype),
+                "slot_pos": jnp.full((batch_size, W), -1, jnp.int32)}
+
+    def mamba_cache():
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+        return {"conv": jnp.zeros((batch_size, cfg.d_conv - 1, conv_dim), dtype),
+                "ssm": jnp.zeros((batch_size, cfg.ssm_heads, cfg.ssm_head_dim,
+                                  cfg.ssm_state), jnp.float32)}
+
+    pattern = group_pattern(cfg)
+    ng = n_groups(cfg)
+
+    def one(kind):
+        return attn_cache() if kind.startswith("attn") else mamba_cache()
+
+    def stack(tree, n):
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), tree)
+
+    cache: Params = {"blocks": stack({f"l{i}": one(k)
+                                      for i, k in enumerate(pattern)}, ng)}
+    if cfg.first_dense:
+        cache["prefix"] = stack({"l0": attn_cache()}, cfg.first_dense)
+    return cache
+
+
+# ------------------------------------------------------------------ apply
+
+def _block_apply(kind: str, p: Params, h, positions, cfg, shard_fns,
+                 cache, pos3, make_cache: bool):
+    aux = jnp.float32(0.0)
+    new_cache = None
+    decode = (cache is not None) and (h.shape[1] == 1)
+    x = layers.rms_norm(h, p["norm1"], cfg.rms_eps)
+    if kind.startswith("attn"):
+        y, nc = layers.attention_block(p["attn"], x, positions, cfg, shard_fns,
+                                       cache=cache if decode else None,
+                                       pos3=pos3)
+        if make_cache:
+            nc = _prefill_attn_cache(p, x, positions, cfg, cache)
+        new_cache = nc
+    else:
+        if make_cache:
+            y, new_cache = mamba2_prefill(p["mamba"], x, cfg, shard_fns)
+        else:
+            y, new_cache = mamba2.mamba2_block(p["mamba"], x, cfg, shard_fns,
+                                               cache=cache if decode else None)
+    h = h + y
+    if kind == "mamba_only":
+        return h, new_cache, aux
+    x = layers.rms_norm(h, p["norm2"], cfg.rms_eps)
+    if kind.endswith("_moe"):
+        y, aux = layers.moe_block(p["moe"], x, cfg, shard_fns)
+    else:
+        y = layers.mlp_block(p["mlp"], x, cfg.mlp, shard_fns)
+    return h + y, new_cache, aux
+
+
+def _prefill_attn_cache(p, x_normed, positions, cfg, cache):
+    """Fill the provided ring-buffer cache from a prefill pass (recomputes
+    K/V — cheap relative to attention, keeps attention_block simple)."""
+    B, S, D = x_normed.shape
+    KH, hd = cfg.n_kv_heads, cfg.head_dim
+    dt = cache["k"].dtype
+    W = cache["k"].shape[1]
+    k = (x_normed @ p["attn"]["wk"].astype(x_normed.dtype))
+    v = (x_normed @ p["attn"]["wv"].astype(x_normed.dtype))
+    if cfg.qkv_bias:
+        k = k + p["attn"]["bk"].astype(k.dtype)
+        v = v + p["attn"]["bv"].astype(v.dtype)
+    k = k.reshape(B, S, KH, hd)
+    v = v.reshape(B, S, KH, hd)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    keep = min(S, W)
+    k_w, v_w, pos_w = k[:, -keep:], v[:, -keep:], positions[:, -keep:]
+    bidx = jnp.arange(B)[:, None]
+    slots = (pos_w % W).astype(jnp.int32)
+    kc = cache["k"].at[bidx, slots].set(k_w.astype(dt))
+    vc = cache["v"].at[bidx, slots].set(v_w.astype(dt))
+    sp = cache["slot_pos"].at[bidx, slots].set(pos_w)
+    return {"k": kc, "v": vc, "slot_pos": sp}
+
+
+def mamba2_prefill(p, x_normed, cfg, shard_fns):
+    """Prefill for SSM blocks: full SSD + final state as cache."""
+    from .mamba2 import _conv1d_causal, ssd_chunked
+    B, S, D = x_normed.shape
+    di, st, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    dt_ = x_normed.dtype
+    zxbcdt = x_normed @ p["in_proj"].astype(dt_)
+    z, xin, Bm, Cm, dt_raw = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + st, 2 * di + 2 * st], axis=-1)
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    K = cfg.d_conv
+    pad = max(0, (K - 1) - S)
+    conv_state = jnp.pad(conv_in, ((0, 0), (pad, 0), (0, 0)))[:, -(K - 1):]
+    conv_out, _ = _conv1d_causal(conv_in, p["conv_w"].astype(dt_))
+    conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(dt_))
+    xin, Bm, Cm = jnp.split(conv_out, [di, di + st], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xin.reshape(B, S, nh, cfg.ssm_head_dim)
+    y, h_last = ssd_chunked(xh, dt, A, Bm.astype(jnp.float32),
+                            Cm.astype(jnp.float32))
+    y = y.astype(dt_) + xh * p["D"].astype(dt_)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = layers.rms_norm(y, p["norm"], cfg.rms_eps) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(dt_)
+    return out, {"conv": conv_state, "ssm": h_last}
+
+
+def apply_model(params: Params, cfg, batch: Dict[str, Any], *,
+                shard_fns=None, cache: Optional[Params] = None,
+                logits_mode: str = "all",
+                compute_dtype=jnp.bfloat16) -> Tuple[jnp.ndarray,
+                                                     Optional[Params],
+                                                     jnp.ndarray]:
+    """Returns (logits, new_cache, aux_loss).
+
+    batch: tokens (B,S) i32 or embeds (B,S,D); optional positions (B,S),
+    pos3 (3,B,S). cache => prefill (S>1) or decode (S==1).
+    """
+    if cfg.embed_input:
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        h = params["embed"].astype(compute_dtype)[tokens]
+    else:
+        h = batch["embeds"].astype(compute_dtype)
+        B, S = h.shape[:2]
+    if cfg.scale_embeds:
+        h = h * jnp.sqrt(jnp.float32(cfg.d_model)).astype(compute_dtype)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    pos3 = batch.get("pos3")
+    h = shard(shard_fns, "hidden", h)
+
+    pattern = group_pattern(cfg)
+    make_cache = cache is not None and S > 1
+    aux_total = jnp.float32(0.0)
+
+    def run_group(h, gp, gcache):
+        aux_sum = jnp.float32(0.0)
+        new_caches = {}
+        for i, kind in enumerate(pattern):
+            sub_cache = gcache[f"l{i}"] if gcache is not None else None
+            h, nc, aux = _block_apply(kind, gp[f"l{i}"], h, positions, cfg,
+                                      shard_fns, sub_cache, pos3, make_cache)
+            h = shard(shard_fns, "hidden", h)
+            if nc is not None:
+                new_caches[f"l{i}"] = nc
+            aux_sum = aux_sum + aux
+        return h, new_caches, aux_sum
+
+    def scan_body(carry, xs):
+        h, aux = carry
+        gp, gcache = xs
+        h, ncache, aux_g = run_group(h, gp, gcache)
+        return (h, aux + aux_g), ncache
+
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots"
+                  else jax.checkpoint_policies.nothing_saveable)
+        scan_body = jax.checkpoint(scan_body, policy=policy)
+
+    new_cache: Optional[Params] = {} if cache is not None else None
+
+    if cfg.first_dense:
+        pc = cache.get("prefix") if cache is not None else None
+
+        def pfx_body(carry, xs):
+            h, aux = carry
+            gp, gcache = xs
+            sub_cache = gcache["l0"] if gcache is not None else None
+            h, nc, aux_g = _block_apply("attn", gp["l0"], h, positions, cfg,
+                                        shard_fns, sub_cache, pos3, make_cache)
+            return (h, aux + aux_g), ({"l0": nc} if nc is not None else {})
+
+        if cfg.remat:
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if cfg.remat_policy == "dots"
+                      else jax.checkpoint_policies.nothing_saveable)
+            pfx_body = jax.checkpoint(pfx_body, policy=policy)
+        (h, aux_total), pfx_cache = jax.lax.scan(
+            pfx_body, (h, aux_total), (params["prefix"], pc),
+            unroll=cfg.first_dense if cfg.unroll_layers else 1)
+        if cache is not None:
+            new_cache["prefix"] = pfx_cache
+
+    bc = cache.get("blocks") if cache is not None else None
+    (h, aux_total), blk_cache = jax.lax.scan(
+        scan_body, (h, aux_total), (params["blocks"], bc),
+        unroll=n_groups(cfg) if cfg.unroll_layers else 1)
+    if cache is not None:
+        new_cache["blocks"] = blk_cache
+
+    h = layers.rms_norm(h, params["final_norm"], cfg.rms_eps)
+    if logits_mode == "last":
+        h = h[:, -1:, :]
+    head = params.get("head")
+    if head is None:
+        head = params["embed"].T
+    logits = (h @ head.astype(h.dtype)).astype(jnp.float32)
+    if logits_mode == "last":
+        logits = logits[:, 0, :]
+    return logits, new_cache, aux_total

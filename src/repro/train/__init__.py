@@ -1,0 +1,1 @@
+from . import optimizer, serve_step, train_step  # noqa: F401

@@ -1,0 +1,66 @@
+"""AdamW with global-norm clipping, as a pure pytree transform.
+
+Optimizer state shards exactly like the params (the planner maps the same
+PartitionSpec over m/v), which is what makes FSDP + elastic restore work
+without special cases.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    count: jnp.ndarray
+
+
+def init(params) -> OptState:
+    z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return OptState(jax.tree.map(z, params), jax.tree.map(z, params),
+                    jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(jax.tree.map(
+        lambda g: jnp.sum(g.astype(jnp.float32) ** 2), tree))
+    return jnp.sqrt(sum(leaves))
+
+
+def update(params, grads, state: OptState, cfg: AdamWConfig):
+    count = state.count + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-12))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    lr = cfg.lr * jnp.minimum(1.0, count / max(cfg.warmup_steps, 1))
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    new_m = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g,
+                         state.m, grads)
+    new_v = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g,
+                         state.v, grads)
+
+    def upd(p, m, v):
+        step = lr * (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        step = step + lr * cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - step).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, new_m, new_v)
+    return new_params, OptState(new_m, new_v, count), {"grad_norm": gn, "lr": lr}

@@ -1,0 +1,62 @@
+"""Serving steps: prefill (sequence -> last logits + cache) and decode
+(one token per call against the cache). These are the ``serve_step``
+lowerings for the decode_* / long_* dry-run shapes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer import apply_model, init_cache
+
+
+def make_prefill_step(cfg, *, shard_fns=None, max_len: Optional[int] = None):
+    def prefill(params, batch):
+        B = (batch["tokens"].shape[0] if cfg.embed_input
+             else batch["embeds"].shape[0])
+        S = (batch["tokens"].shape[1] if cfg.embed_input
+             else batch["embeds"].shape[1])
+        cache = init_cache(cfg, B, max_len or S)
+        logits, cache, _ = apply_model(params, cfg, batch,
+                                       shard_fns=shard_fns, cache=cache,
+                                       logits_mode="last")
+        return logits, cache
+    return prefill
+
+
+def make_decode_step(cfg, *, shard_fns=None):
+    """decode(params, cache, tokens (B,) or embeds (B,D), pos (B,)) ->
+    (logits (B,V), cache)."""
+    def decode(params, cache, token, pos):
+        if cfg.embed_input:
+            batch = {"tokens": token[:, None],
+                     "positions": pos[:, None]}
+        else:
+            batch = {"embeds": token[:, None, :],
+                     "positions": pos[:, None]}
+        if cfg.m_rope:
+            batch["pos3"] = jnp.broadcast_to(pos[None, :, None],
+                                             (3,) + pos.shape + (1,))
+        logits, cache, _ = apply_model(params, cfg, batch,
+                                       shard_fns=shard_fns, cache=cache,
+                                       logits_mode="last")
+        return logits, cache
+    return decode
+
+
+def greedy_generate(cfg, params, prompt_tokens, *, steps: int, max_len: int,
+                    shard_fns=None):
+    """Reference generation loop for the examples/tests (prefill + N decodes)."""
+    prefill = make_prefill_step(cfg, shard_fns=shard_fns, max_len=max_len)
+    decode = make_decode_step(cfg, shard_fns=shard_fns)
+    B, S = prompt_tokens.shape
+    logits, cache = prefill(params, {"tokens": prompt_tokens})
+    out = [jnp.argmax(logits, -1)]
+    pos = jnp.full((B,), S, jnp.int32)
+    for _ in range(steps - 1):
+        logits, cache = decode(params, cache, out[-1].astype(jnp.int32), pos)
+        out.append(jnp.argmax(logits, -1))
+        pos = pos + 1
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,110 @@
+"""Training step: microbatched grad accumulation (scan), remat, AdamW.
+
+The global batch is reshaped to (microbatches, micro_batch, seq) and scanned;
+each micro step runs the rematerialized model, so peak activation memory is
+one micro-batch's worth and — with MoE — the (T, E, C) dispatch tensors stay
+small (the §Perf lever that makes kimi-k2 train_4k lowerable). Gradients
+accumulate in f32; XLA turns the param-gradient psum across data shards into
+reduce-scatters against the FSDP layout.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer import apply_model
+from . import optimizer as opt
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: opt.OptState
+    step: jnp.ndarray
+
+
+def cross_entropy(logits, labels, ignore_id: int = -1):
+    """logits (B,S,V) f32, labels (B,S) i32; mean over non-ignored."""
+    V = logits.shape[-1]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_fn(params, cfg, batch, shard_fns, aux_weight: float = 0.01):
+    logits, _, aux = apply_model(params, cfg, batch, shard_fns=shard_fns)
+    if cfg.causal:
+        logits = logits[:, :-1]
+        labels = batch["labels"][:, 1:]
+    else:
+        labels = batch["labels"]
+    loss = cross_entropy(logits, labels)
+    return loss + aux_weight * aux, (loss, aux)
+
+
+def make_train_step(cfg, adamw: opt.AdamWConfig, *, microbatches: int = 1,
+                    shard_fns=None, grad_shardings=None):
+    """Returns train_step(state, batch) -> (state, metrics); jit it with the
+    planner's in/out shardings.
+
+    grad_shardings: optional params-shaped tree of NamedSharding applied to
+    the gradient accumulators — without it, XLA's SPMD propagation can fall
+    back to replicating the scan-carried accumulators (flops/collective
+    blow-up observed on the 16x16 mesh; see EXPERIMENTS.md §Perf iteration 0).
+    """
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def constrain(g):
+        if grad_shardings is None:
+            return g
+        return jax.tree.map(jax.lax.with_sharding_constraint, g,
+                            grad_shardings)
+
+    def split_micro(name, x):
+        if name == "pos3":                       # (3, B, S): batch is axis 1
+            b = x.shape[1]
+            return x.reshape((3, microbatches, b // microbatches) +
+                             x.shape[2:]).swapaxes(0, 1)
+        b = x.shape[0]
+        return x.reshape((microbatches, b // microbatches) + x.shape[1:])
+
+    def train_step(state: TrainState, batch: Dict[str, Any]):
+        if microbatches == 1:
+            (l, (ce, aux)), grads = grad_fn(state.params, cfg, batch,
+                                            shard_fns)
+            grads = constrain(grads)
+            lsum, asum = ce, aux
+        else:
+            micro = {k: split_micro(k, v) for k, v in batch.items()}
+
+            def micro_step(carry, mb):
+                gsum, lsum, asum = carry
+                (l, (ce, aux)), g = grad_fn(state.params, cfg, mb, shard_fns)
+                g = constrain(g)
+                gsum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                    gsum, g)
+                return (constrain(gsum), lsum + ce, asum + aux), None
+
+            zeros = constrain(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params))
+            (gsum, lsum, asum), _ = jax.lax.scan(
+                micro_step, (zeros, jnp.float32(0), jnp.float32(0)), micro)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+        params, opt_state, om = opt.update(state.params, grads, state.opt, adamw)
+        metrics = {"loss": lsum / microbatches, "aux": asum / microbatches,
+                   **om}
+        return TrainState(params, opt_state, state.step + 1), metrics
+
+    return train_step
+
+
+def init_state(cfg, key, dtype=jnp.float32) -> TrainState:
+    from ..models.transformer import init_params
+    params = init_params(cfg, key, dtype)
+    return TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))

@@ -1,0 +1,44 @@
+"""Dry-run machinery on a small forced-device mesh (subprocess): lower +
+compile one real (arch x shape) cell with the production sharding planner on
+a (2,2,2) pod/data/model mesh — the same code path as the 512-device run,
+scaled so CI stays fast."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+SCRIPT = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, %r)
+import json
+import numpy as np
+import jax
+
+from repro.launch.steps import build_step
+from repro.launch.dryrun import collective_bytes
+
+mesh = jax.sharding.Mesh(
+    np.asarray(jax.devices()[:8]).reshape(2, 2, 2), ("pod", "data", "model"))
+with mesh:
+    jitted, args = build_step("qwen1.5-0.5b", "decode_32k", mesh)
+    compiled = jitted.lower(*args).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll, counts, _ = collective_bytes(compiled.as_text())
+out = {"flops": float(cost.get("flops", -1)),
+       "collectives": {k: int(v) for k, v in coll.items()}}
+print("RESULT " + json.dumps(out))
+'''
+
+
+def test_dryrun_cell_small_mesh():
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    proc = subprocess.run([sys.executable, "-c", SCRIPT % src],
+                          capture_output=True, text=True, timeout=560)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    out = json.loads(line[len("RESULT "):])
+    assert out["flops"] > 0

@@ -1,0 +1,82 @@
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import alphabet as ab
+from repro.core import centerstar
+from repro.core.msa import MSAConfig, center_star_msa, decode_msa
+
+
+@pytest.mark.parametrize("method", ["plain", "kmer"])
+def test_msa_recovers_sequences(dna_family, method):
+    cfg = MSAConfig(method=method, k=8, max_anchors=96, max_seg=48)
+    res = center_star_msa(dna_family, cfg)
+    rows = decode_msa(res.msa, cfg)
+    assert len({len(r) for r in rows}) == 1
+    for s, r in zip(dna_family, rows):
+        assert r.replace("-", "") == s
+
+
+def test_kmer_equals_plain_quality(dna_family):
+    from repro.core.sp_score import avg_sp
+    import jax.numpy as jnp
+    gap, nch = ab.DNA.gap_code, ab.DNA.n_chars
+    sp_p = float(avg_sp(jnp.asarray(center_star_msa(
+        dna_family, MSAConfig(method="plain")).msa), gap_code=gap, n_chars=nch))
+    sp_k = float(avg_sp(jnp.asarray(center_star_msa(
+        dna_family, MSAConfig(method="kmer", k=8, max_anchors=96,
+                              max_seg=48)).msa), gap_code=gap, n_chars=nch))
+    # anchored path must stay within 15% of full-DP quality (lower=better)
+    assert sp_k <= sp_p * 1.15 + 1.0
+
+
+def test_protein_sw(dna_family):
+    prots = ["MKTAYIAKQRQISFVKSHFSRQLEERLGLIEVQ",
+             "MKTAYIAKQRQISFVKSHFSRQLEERLGLIEV",
+             "MKTAYIAQQRQISFVKSHFSRQLEERLGLIEVQA"]
+    cfg = MSAConfig(method="sw", alphabet="protein", gap_open=11, gap_extend=1)
+    res = center_star_msa(prots, cfg)
+    for s, r in zip(prots, decode_msa(res.msa, cfg)):
+        assert r.replace("-", "") == s
+
+
+def test_center_selection_sampled(dna_family):
+    cfg = MSAConfig(method="kmer", center="sampled", k=8)
+    res = center_star_msa(dna_family, cfg)
+    assert 0 <= res.center_idx < len(dna_family)
+
+
+def test_identical_sequences_align_trivially():
+    seqs = ["ACGTACGTAA"] * 5
+    res = center_star_msa(seqs, MSAConfig(method="plain"))
+    assert res.width == 10
+    assert (res.msa == res.msa[0]).all()
+
+
+def test_progressive_baseline_valid_and_better_on_diverged():
+    import jax.numpy as jnp
+    from repro.core.progressive import progressive_msa
+    from repro.core.sp_score import avg_sp
+    from repro.data import SimConfig, simulate_family
+    fam = simulate_family(SimConfig(n_leaves=8, root_len=250, branch_sub=0.06,
+                                    branch_indel=0.004, seed=5))
+    cfg = MSAConfig(method="plain")
+    prog = progressive_msa(fam.seqs, cfg)
+    rows = decode_msa(prog.msa, cfg)
+    for s, r in zip(fam.seqs, rows):
+        assert r.replace("-", "") == s
+    gap, nch = ab.DNA.gap_code, ab.DNA.n_chars
+    sp_prog = float(avg_sp(jnp.asarray(prog.msa), gap_code=gap, n_chars=nch))
+    sp_cs = float(avg_sp(jnp.asarray(center_star_msa(fam.seqs, cfg).msa),
+                         gap_code=gap, n_chars=nch))
+    # the paper's Table 2-4 relationship: progressive class >= center star
+    # on diverged families (lower penalty is better)
+    assert sp_prog <= sp_cs * 1.02
+
+
+def test_drop_dead_columns():
+    gap = ab.DNA.gap_code
+    msa = np.array([[0, gap, 1], [2, gap, 3]], np.int8)
+    out = centerstar.drop_dead_columns(msa, gap)
+    assert out.shape == (2, 2)

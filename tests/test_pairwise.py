@@ -1,0 +1,80 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import alphabet as ab
+from repro.core import pairwise as pw
+
+DNA = ab.DNA
+SUB = ab.dna_matrix().astype(jnp.float32)
+
+
+def align(s1, s2, local=False, go=3, ge=1):
+    a = jnp.asarray(DNA.encode(s1))
+    b = jnp.asarray(DNA.encode(s2))
+    r = pw.align_pair(a, jnp.int32(len(s1)), b, jnp.int32(len(s2)), SUB,
+                      gap_open=go, gap_extend=ge, local=local,
+                      gap_code=DNA.gap_code)
+    k = int(r.aln_len)
+    return (float(r.score), DNA.decode(np.asarray(r.a_row)[:k]),
+            DNA.decode(np.asarray(r.b_row)[:k]))
+
+
+def test_identical():
+    s, ra, rb = align("ACGTACGT", "ACGTACGT")
+    assert s == 16 and ra == rb == "ACGTACGT"
+
+
+def test_single_mismatch():
+    s, ra, rb = align("ACGT", "AGGT")
+    assert s == 5 and "-" not in ra
+
+
+def test_single_deletion_affine():
+    s, ra, rb = align("ACGTACGT", "ACGACGT")
+    assert s == 11
+    assert ra.replace("-", "") == "ACGTACGT"
+    assert rb.replace("-", "") == "ACGACGT"
+    assert rb.count("-") == 1
+
+
+def test_affine_gap_cheaper_than_two_opens():
+    # 2-length gap costs go+ge = 4, not 2*go = 6
+    s, _, _ = align("AACCGGTT", "AAGGTT")
+    assert s == 6 * 2 - 4
+
+
+def test_local_extracts_island():
+    s, ra, rb = align("TTTTACGTACGTTTTT", "CCCCACGTACGCCC", local=True)
+    assert ra == rb == "ACGTACG" and s == 14
+
+
+def test_score_symmetry():
+    s1, _, _ = align("ACGTTGCA", "ACGTGCA")
+    s2, _, _ = align("ACGTGCA", "ACGTTGCA")
+    assert s1 == s2
+
+
+def test_batched_matches_single(dna_family):
+    seqs = dna_family[:4]
+    A, lens = ab.encode_batch(seqs, DNA)
+    b = jnp.asarray(DNA.encode(seqs[0]))
+    res = pw.align_many_to_one(A, lens, b, jnp.int32(len(seqs[0])), SUB,
+                               gap_open=3, gap_extend=1, gap_code=DNA.gap_code)
+    for i, s in enumerate(seqs):
+        single = pw.align_pair(A[i], lens[i], b, jnp.int32(len(seqs[0])), SUB,
+                               gap_open=3, gap_extend=1, gap_code=DNA.gap_code)
+        assert float(res.score[i]) == float(single.score)
+
+
+def test_gap_removal_recovers_inputs(dna_family):
+    for s in dna_family[1:3]:
+        sc, ra, rb = align(dna_family[0], s)
+        assert ra.replace("-", "") == dna_family[0]
+        assert rb.replace("-", "") == s
+
+
+def test_empty_vs_full():
+    # aligning to a 2-char sequence: all-gap costs
+    s, ra, rb = align("ACGT", "AC")
+    assert ra.replace("-", "") == "ACGT" and rb.replace("-", "") == "AC"

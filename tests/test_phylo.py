@@ -1,0 +1,92 @@
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import alphabet as ab
+from repro.core import cluster, distance, likelihood, nj, treeio
+from repro.core.msa import MSAConfig, center_star_msa
+from repro.data import SimConfig, simulate_family
+
+
+class _T:
+    def __init__(self, children, root):
+        self.children, self.root = children, root
+
+
+def _reconstruct(n_leaves=12, seed=3):
+    fam = simulate_family(SimConfig(n_leaves=n_leaves, root_len=500,
+                                    branch_sub=0.02, branch_indel=0.001,
+                                    seed=seed))
+    res = center_star_msa(fam.seqs, MSAConfig(method="kmer", k=10,
+                                              max_anchors=128, max_seg=48))
+    return fam, jnp.asarray(res.msa)
+
+
+def test_nj_recovers_topology():
+    fam, msa = _reconstruct()
+    D = distance.distance_matrix(msa, gap_code=ab.DNA.gap_code,
+                                 n_chars=ab.DNA.n_chars)
+    tree = nj.neighbor_joining(D, 12)
+    rf = treeio.normalized_rf(
+        _T(np.asarray(tree.children), int(tree.root)),
+        _T(fam.children, fam.root), 12)
+    assert rf <= 0.35
+
+
+def test_distance_matrix_properties():
+    _, msa = _reconstruct(8, seed=5)
+    D = np.asarray(distance.distance_matrix(msa, gap_code=ab.DNA.gap_code,
+                                            n_chars=ab.DNA.n_chars))
+    assert np.allclose(D, D.T)
+    assert np.allclose(np.diag(D), 0)
+    assert (D >= 0).all()
+
+
+def test_likelihood_finite_and_negative():
+    fam, msa = _reconstruct(8, seed=7)
+    D = distance.distance_matrix(msa, gap_code=ab.DNA.gap_code,
+                                 n_chars=ab.DNA.n_chars)
+    tree = nj.neighbor_joining(D, 8)
+    ll = float(likelihood.log_likelihood(msa, tree.children, tree.blen,
+                                         tree.root, gap_code=ab.DNA.gap_code))
+    assert np.isfinite(ll) and ll < 0
+
+
+def test_better_tree_higher_likelihood():
+    """The NJ tree should beat a random topology in likelihood."""
+    fam, msa = _reconstruct(10, seed=11)
+    gap = ab.DNA.gap_code
+    D = distance.distance_matrix(msa, gap_code=gap, n_chars=ab.DNA.n_chars)
+    good = nj.neighbor_joining(D, 10)
+    ll_good = float(likelihood.log_likelihood(msa, good.children, good.blen,
+                                              good.root, gap_code=gap))
+    # random tree: NJ on shuffled distances
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(10)
+    Dbad = np.asarray(D)[np.ix_(perm, perm)]
+    # relabel leaves so the tree is over the wrong taxa
+    bad = nj.neighbor_joining(jnp.asarray(Dbad), 10)
+    ll_bad = float(likelihood.log_likelihood(msa, bad.children, bad.blen,
+                                             bad.root, gap_code=gap))
+    assert ll_good >= ll_bad
+
+
+def test_cluster_phylogeny_runs_and_covers_all_leaves():
+    fam, msa = _reconstruct(48, seed=13)
+    cp = cluster.cluster_phylogeny(np.asarray(msa), gap_code=ab.DNA.gap_code,
+                                   n_chars=ab.DNA.n_chars,
+                                   cfg=cluster.ClusterConfig(target_cluster=12,
+                                                             seed=1))
+    sets = treeio.leaf_sets(cp.children, cp.root, 48)
+    assert sets[cp.root] == frozenset(range(48))
+    nwk = treeio.to_newick(cp.children, cp.blen, cp.root, fam.names)
+    assert nwk.count("seq") == 48
+
+
+def test_newick_roundtrip_structure():
+    fam, msa = _reconstruct(6, seed=17)
+    D = distance.distance_matrix(msa, gap_code=ab.DNA.gap_code,
+                                 n_chars=ab.DNA.n_chars)
+    tree = nj.neighbor_joining(D, 6)
+    nwk = treeio.to_newick(tree.children, tree.blen, int(tree.root),
+                           fam.names)
+    assert nwk.endswith(";") and nwk.count("(") == nwk.count(")")

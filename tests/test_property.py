@@ -1,0 +1,85 @@
+"""Hypothesis property tests on system invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import alphabet as ab
+from repro.core import nj as nj_mod
+from repro.core import treeio
+from repro.core.msa import MSAConfig, center_star_msa, decode_msa
+from repro.dist.fault import BackupShardPlan
+
+DNA_SEQ = st.text(alphabet="ACGT", min_size=4, max_size=60)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(DNA_SEQ, min_size=2, max_size=6))
+def test_msa_gap_removal_recovers_inputs(seqs):
+    res = center_star_msa(seqs, MSAConfig(method="plain"))
+    rows = decode_msa(res.msa, MSAConfig(method="plain"))
+    for s, r in zip(seqs, rows):
+        assert r.replace("-", "") == s
+    assert len({len(r) for r in rows}) == 1
+
+
+@settings(max_examples=15, deadline=None)
+@given(DNA_SEQ, DNA_SEQ)
+def test_alignment_score_symmetric(s1, s2):
+    from repro.core import pairwise as pw
+    sub = ab.dna_matrix().astype(jnp.float32)
+
+    def score(a, b):
+        return float(pw.score_only(
+            jnp.asarray(ab.DNA.encode(a)), jnp.int32(len(a)),
+            jnp.asarray(ab.DNA.encode(b)), jnp.int32(len(b)), sub,
+            gap_open=3, gap_extend=1))
+    assert score(s1, s2) == score(s2, s1)
+
+
+@settings(max_examples=15, deadline=None)
+@given(DNA_SEQ)
+def test_self_alignment_is_perfect(s):
+    from repro.core import pairwise as pw
+    sub = ab.dna_matrix().astype(jnp.float32)
+    sc = float(pw.score_only(
+        jnp.asarray(ab.DNA.encode(s)), jnp.int32(len(s)),
+        jnp.asarray(ab.DNA.encode(s)), jnp.int32(len(s)), sub,
+        gap_open=3, gap_extend=1))
+    assert sc == 2 * len(s)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=4, max_value=12), st.integers(0, 10**6))
+def test_nj_produces_valid_binary_tree(n, seed):
+    rng = np.random.default_rng(seed)
+    pts = rng.normal(0, 1, (n, 3))
+    D = np.sqrt(((pts[:, None] - pts[None]) ** 2).sum(-1)).astype(np.float32)
+    tree = nj_mod.neighbor_joining(jnp.asarray(D), n)
+    sets = treeio.leaf_sets(np.asarray(tree.children), int(tree.root), n)
+    assert sets[int(tree.root)] == frozenset(range(n))
+    internal = [i for i in range(2 * n - 1)
+                if np.asarray(tree.children)[i][0] >= 0]
+    assert len(internal) == n - 1  # binary rooted tree
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 64), st.integers(2, 4))
+def test_backup_plan_full_coverage(n_hosts, repl):
+    repl = min(repl, n_hosts)
+    plan = BackupShardPlan(n_hosts=n_hosts, replication=repl)
+    for s in range(n_hosts):
+        assert len(set(plan.owners(s))) == repl
+        if repl > 1:
+            for dead in plan.owners(s):
+                assert plan.takeover(dead, s) != dead
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(0, 4), min_size=8, max_size=64),
+       st.integers(2, 5))
+def test_sp_score_nonnegative_and_zero_for_identical(codes, n):
+    from repro.core.sp_score import avg_sp
+    row = np.asarray(codes, np.int8)
+    msa = jnp.asarray(np.tile(row, (n, 1)))
+    sp = float(avg_sp(msa, gap_code=5, n_chars=5))
+    assert sp == 0.0

@@ -1,0 +1,74 @@
+"""Sharding planner invariants on a trivial mesh + spec sanity on fake
+multi-axis meshes (using abstract mesh shapes via divisibility math)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ALL_ARCHS, SHAPES, get_arch, shape_applicable
+from repro.launch.mesh import make_local_mesh
+from repro.launch.steps import input_specs, microbatches_for
+from repro.models import sharding_plan as sp
+from repro.models.transformer import init_params
+
+
+def test_param_specs_cover_tree():
+    mesh = make_local_mesh((1, 1), ("data", "model"))
+    cfg = get_arch("kimi-k2-1t-a32b").smoke
+    shapes = jax.eval_shape(functools.partial(init_params, cfg),
+                            jax.random.PRNGKey(0))
+    specs = sp.params_pspecs(shapes, mesh)
+    n_leaves = len(jax.tree.leaves(shapes))
+    n_specs = len(jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)))
+    assert n_specs == n_leaves
+
+
+def test_spec_ranks_match_leaf_ranks():
+    mesh = make_local_mesh((1, 1), ("data", "model"))
+    for arch in ALL_ARCHS:
+        cfg = get_arch(arch).smoke
+        shapes = jax.eval_shape(functools.partial(init_params, cfg),
+                                jax.random.PRNGKey(0))
+
+        def check(path, leaf):
+            name = str(getattr(path[-1], "key", path[-1]))
+            spec = sp.param_spec(name, leaf.shape, mesh)
+            assert len(spec) <= len(leaf.shape), (arch, path, spec, leaf.shape)
+        jax.tree_util.tree_map_with_path(check, shapes)
+
+
+def test_input_specs_shapes():
+    for arch in ALL_ARCHS:
+        cfg = get_arch(arch).config
+        for shape_name, shape in SHAPES.items():
+            ok, _ = shape_applicable(cfg, shape)
+            if not ok:
+                continue
+            specs = input_specs(arch, shape_name)
+            if shape.kind in ("train", "prefill"):
+                main = specs.get("tokens", specs.get("embeds"))
+                assert main.shape[0] == shape.global_batch
+                assert main.shape[1] == shape.seq_len
+            else:
+                assert specs["token"].shape[0] == shape.global_batch
+
+
+def test_skip_rules():
+    assert not shape_applicable(get_arch("gemma-2b").config,
+                                SHAPES["long_500k"])[0]
+    assert not shape_applicable(get_arch("hubert-xlarge").config,
+                                SHAPES["decode_32k"])[0]
+    assert shape_applicable(get_arch("mamba2-130m").config,
+                            SHAPES["long_500k"])[0]
+    assert shape_applicable(get_arch("h2o-danube-3-4b").config,
+                            SHAPES["long_500k"])[0]
+    assert shape_applicable(get_arch("jamba-1.5-large-398b").config,
+                            SHAPES["long_500k"])[0]
+
+
+def test_microbatch_divisibility():
+    mesh = make_local_mesh((1, 1), ("data", "model"))
+    for arch in ALL_ARCHS:
+        mu = microbatches_for(arch, "train_4k", mesh)
+        assert SHAPES["train_4k"].global_batch % mu == 0
