@@ -10,9 +10,11 @@ Pipeline (paper Fig. 3):
   3. reduce(1): merge insert-space profiles (columnwise max)
   4. map(2): rebuild every row in the merged frame
 
-The distributed version (launch/msa_run.py, repro.dist.mapreduce) runs the
-same jitted stages under shard_map with the center replicated; this module is
-the single-host reference and the building block.
+The distributed version runs the same jitted stages under shard_map with the
+center replicated: ``repro.dist.mapreduce.distributed_center_star`` is the
+jitted pipeline, ``repro.dist.mapreduce.msa_over_mesh`` the host driver, and
+``repro.launch.msa_run --dist`` the CLI entry. This module is the
+single-host reference and the building block both reuse.
 """
 from __future__ import annotations
 
@@ -134,14 +136,24 @@ def kmer_align_batch(Q, lens, center, lc, table, sub, *, k, stride,
 
 # ------------------------------------------------------------------- driver
 
+def encode_for_msa(seqs: Sequence[str], cfg: MSAConfig):
+    """Normalize (RNA U->T) and encode a string batch for ``cfg``'s alphabet.
+
+    Shared by this host driver and ``repro.dist.mapreduce.msa_over_mesh`` so
+    the two pipelines can never diverge on preprocessing.
+    """
+    return ab.encode_batch(
+        [s.replace("U", "T").replace("u", "t")
+         if cfg.alphabet == "rna" else s for s in seqs], cfg.alpha())
+
+
 def center_star_msa(seqs: Sequence[str] | np.ndarray,
                     cfg: MSAConfig,
                     lens: Optional[np.ndarray] = None) -> MSAResult:
     alpha = cfg.alpha()
     gap = alpha.gap_code
     if isinstance(seqs, (list, tuple)):
-        S, lens = ab.encode_batch([s.replace("U", "T").replace("u", "t")
-                                   if cfg.alphabet == "rna" else s for s in seqs], alpha)
+        S, lens = encode_for_msa(seqs, cfg)
     else:
         S = jnp.asarray(seqs)
         lens = jnp.asarray(lens)

@@ -1,0 +1,23 @@
+"""Distributed runtime: the paper's Spark layer, in JAX terms.
+
+HAlign-II delegates distribution to Spark: sequences become an RDD of
+shards, map(1) aligns each shard against the broadcast center, reduce(1)
+merges insert-space profiles, map(2) re-emits rows in the merged frame,
+and Spark supplies checkpointing, replication, and straggler recovery for
+free. This package is that layer for a JAX mesh:
+
+  sharding.py          named-axis helpers + the versioned shard_map import
+  mapreduce.py         shard_map map/reduce over sequence shards (Fig. 3)
+  collectives.py       overlap-friendly collectives (all-gather/matmul)
+  grad_compression.py  int8 quantized psum-mean with error feedback
+  checkpoint.py        async atomic checkpoints with retention
+  fault.py             shard replication plan + failure-replay step loop
+
+Everything here runs unchanged on one CPU device (tests), a forced
+multi-device host platform (tests/test_multidevice.py), or a real pod.
+"""
+from . import checkpoint, collectives, fault, grad_compression, mapreduce, sharding
+from .sharding import shard_map
+
+__all__ = ["checkpoint", "collectives", "fault", "grad_compression",
+           "mapreduce", "sharding", "shard_map"]

@@ -1,0 +1,145 @@
+"""Async atomic checkpoints with retention — the durability half of Spark.
+
+One ``step_<N>.npz`` file per step holding the tree's leaves in flatten
+order. Writes go to a temp file in the same directory and are
+``os.replace``d into place, so a crash mid-write never corrupts the latest
+step. ``async_write=True`` moves the file IO to a background thread (the
+device->host transfer still happens in ``save`` so the caller may mutate
+the live tree immediately after). Retention keeps the newest ``keep``
+steps. ``restore`` walks newest-to-oldest past unreadable/mismatched files
+— a corrupt latest step costs one checkpoint interval, not the run.
+"""
+from __future__ import annotations
+
+import os
+import uuid
+import warnings
+from concurrent.futures import Future, ThreadPoolExecutor
+from pathlib import Path
+from typing import List, Optional
+
+import jax
+import numpy as np
+
+_PREFIX = "step_"
+_SUFFIX = ".npz"
+
+
+class CheckpointManager:
+    def __init__(self, directory, keep: Optional[int] = None,
+                 async_write: bool = False):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_write = async_write
+        self._pool = ThreadPoolExecutor(max_workers=1) if async_write else None
+        self._pending: List[Future] = []
+
+    # ------------------------------------------------------------- inventory
+
+    def _path(self, step: int) -> Path:
+        return self.dir / f"{_PREFIX}{step:010d}{_SUFFIX}"
+
+    def all_steps(self) -> List[int]:
+        steps = []
+        for p in self.dir.glob(f"{_PREFIX}*{_SUFFIX}"):
+            try:
+                steps.append(int(p.name[len(_PREFIX):-len(_SUFFIX)]))
+            except ValueError:
+                continue
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # ------------------------------------------------------------------ save
+
+    def save(self, step: int, tree, block: bool = False):
+        """Checkpoint ``tree`` as ``step``. Returns after the device->host
+        copy; the file write is backgrounded unless ``block`` or sync mode."""
+        host = [np.asarray(x) for x in jax.tree.leaves(tree)]
+        if self.async_write and not block:
+            self._pending.append(self._pool.submit(self._write, step, host))
+        else:
+            self._write(step, host)
+
+    def _write(self, step: int, host_leaves):
+        final = self._path(step)
+        tmp = self.dir / f".tmp-{uuid.uuid4().hex}"
+        with open(tmp, "wb") as f:
+            np.savez(f, **{f"leaf_{i}": a for i, a in enumerate(host_leaves)})
+        os.replace(tmp, final)
+        self._gc()
+
+    def _gc(self):
+        if self.keep is None:
+            return
+        steps = self.all_steps()
+        for s in steps[:max(len(steps) - self.keep, 0)]:
+            try:
+                self._path(s).unlink()
+            except FileNotFoundError:
+                pass
+
+    def wait(self):
+        """Block until every async save has hit disk (raises their errors)."""
+        pending, self._pending = self._pending, []
+        for f in pending:
+            f.result()
+
+    # --------------------------------------------------------------- restore
+
+    def restore(self, like, shardings=None, step: Optional[int] = None):
+        """Load into the structure of ``like``; returns ``(tree, step)``.
+
+        ``shardings``: optional tree of ``jax.sharding.Sharding`` matching
+        ``like`` — leaves are ``device_put`` with them, which is what makes
+        restore elastic across mesh shapes (save on 4x2, restore on 8x1).
+        With ``step=None`` the newest readable checkpoint wins; unreadable
+        or structurally mismatched files are skipped with a warning.
+        """
+        self.wait()
+        leaves, treedef = jax.tree.flatten(like)
+        candidates = [step] if step is not None else self.all_steps()[::-1]
+        for s in candidates:
+            host = self._read(s, shapes=[np.shape(x) for x in leaves],
+                              strict=step is not None)
+            if host is None:
+                continue
+            if shardings is not None:
+                sh_leaves = treedef.flatten_up_to(shardings)
+                out = [jax.device_put(h, d) for h, d in zip(host, sh_leaves)]
+            else:
+                out = [jax.numpy.asarray(h) for h in host]
+            return jax.tree.unflatten(treedef, out), s
+        raise FileNotFoundError(
+            f"no restorable checkpoint in {self.dir} "
+            f"(requested step={step}, present={self.all_steps()})")
+
+    def _read(self, step: int, *, shapes, strict: bool):
+        path = self._path(step)
+        try:
+            with np.load(path) as z:
+                host = [z[f"leaf_{i}"] for i in range(len(z.files))]
+        except Exception as e:
+            if strict:
+                raise
+            warnings.warn(f"skipping unreadable checkpoint {path}: {e!r}")
+            return None
+        msg = None
+        if len(host) != len(shapes):
+            msg = (f"checkpoint {path} has {len(host)} leaves, "
+                   f"restore target has {len(shapes)}")
+        else:
+            for i, (h, shp) in enumerate(zip(host, shapes)):
+                if tuple(h.shape) != tuple(shp):
+                    msg = (f"checkpoint {path} leaf {i} has shape {h.shape}, "
+                           f"restore target expects {shp}")
+                    break
+        if msg is not None:
+            if strict:
+                raise ValueError(msg)
+            warnings.warn("skipping: " + msg)
+            return None
+        return host

@@ -1,0 +1,81 @@
+"""Overlap-friendly collectives for shard_map code.
+
+These are the communication patterns the train/serve steps lean on, written
+so compute and communication interleave: instead of one bulk all-gather
+followed by one big matmul, the ring variants move one shard per step with
+``ppermute`` while the matmul for the shard already on-device runs. XLA's
+latency-hiding scheduler can then overlap the permute of step s+1 with the
+matmul of step s. All helpers are shard_map-internal (they take the axis
+*name*); axis sizes resolve statically via ``psum(1, axis)``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def axis_size(axis_name: str) -> int:
+    """Static size of a named mesh axis, usable inside shard_map."""
+    return int(jax.lax.psum(1, axis_name))
+
+
+def ring_all_gather(x, axis_name: str, *, tiled_axis: int = 0):
+    """All-gather via a ring of ppermutes (overlappable, bandwidth-optimal).
+
+    Device i contributes its shard; the result concatenates all shards along
+    ``tiled_axis`` in axis-index order, replicated on every device.
+    """
+    n = axis_size(axis_name)
+    if n == 1:
+        return x
+    idx = jax.lax.axis_index(axis_name)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    chunk = x.shape[tiled_axis]
+    shape = list(x.shape)
+    shape[tiled_axis] = chunk * n
+    out = jnp.zeros(shape, x.dtype)
+    cur = x
+    for s in range(n):
+        src = (idx - s) % n                       # owner of the shard we hold
+        start = [0] * out.ndim
+        start[tiled_axis] = src * chunk
+        out = jax.lax.dynamic_update_slice(out, cur, tuple(start))
+        if s < n - 1:
+            cur = jax.lax.ppermute(cur, axis_name, perm)
+    return out
+
+
+def ag_matmul_overlap(x, w, axis_name: str):
+    """``x @ all_gather(w)`` with the gather decomposed into a matmul ring.
+
+    ``w`` is column-sharded over ``axis_name`` (spec P(None, axis)); ``x`` is
+    replicated. Each ring step multiplies the weight shard currently
+    on-device into its column block of the output while the next shard is in
+    flight — the all-gather/matmul overlap pattern. Returns the full
+    (x.shape[0], w_cols * n) product on every device.
+    """
+    n = axis_size(axis_name)
+    if n == 1:
+        return jnp.matmul(x, w)
+    idx = jax.lax.axis_index(axis_name)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    cols = w.shape[-1]
+    dt = jnp.result_type(x.dtype, w.dtype)
+    out = jnp.zeros(x.shape[:-1] + (cols * n,), dt)
+    w_cur = w
+    for s in range(n):
+        src = (idx - s) % n
+        block = jnp.matmul(x, w_cur).astype(dt)
+        start = (0,) * (out.ndim - 1) + (src * cols,)
+        out = jax.lax.dynamic_update_slice(out, block, start)
+        if s < n - 1:
+            w_cur = jax.lax.ppermute(w_cur, axis_name, perm)
+    return out
+
+
+def psum_scatter_mean(x, axis_name: str, *, tiled_axis: int = 0):
+    """Mean-reduce then keep only this device's shard (reduce-scatter)."""
+    n = axis_size(axis_name)
+    y = jax.lax.psum_scatter(x, axis_name, scatter_dimension=tiled_axis,
+                             tiled=True)
+    return y / n

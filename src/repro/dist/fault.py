@@ -1,0 +1,121 @@
+"""Failure recovery: the scheduler work Spark does for HAlign-II.
+
+Two pieces:
+
+``BackupShardPlan`` — static replication plan mapping every sequence shard
+to ``replication`` hosts (primary first, ring successors after), plus the
+reassignment table used when a host dies: each affected shard moves to its
+first surviving owner, so recovery is a table lookup, not a reshuffle.
+
+``ResilientLoop`` — the deterministic replay loop around a step function:
+checkpoint every ``ckpt_every`` steps, and on ``StepFailure`` (preemption,
+injected fault, collective timeout surfaced by the caller) restore the
+newest checkpoint and replay forward. Steps are pure functions of
+``(state, batch(step))``, so replay reproduces the exact trajectory —
+failures cost wall-clock, never correctness.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+from .checkpoint import CheckpointManager
+
+
+class StepFailure(RuntimeError):
+    """A step failed in a way that warrants checkpoint replay."""
+
+
+@dataclasses.dataclass(frozen=True)
+class BackupShardPlan:
+    """shard s lives on hosts (s, s+1, ..., s+replication-1) mod n_hosts.
+
+    ``n_shards`` defaults to one shard per host; pass it explicitly when
+    the data is split finer than the host count.
+    """
+    n_hosts: int
+    replication: int
+    n_shards: Optional[int] = None
+
+    def __post_init__(self):
+        if not 1 <= self.replication <= self.n_hosts:
+            raise ValueError(
+                f"replication {self.replication} not in [1, {self.n_hosts}]")
+        if self.n_shards is None:
+            object.__setattr__(self, "n_shards", self.n_hosts)
+
+    def owners(self, shard: int) -> List[int]:
+        """Hosts holding ``shard``; owners[0] is the primary."""
+        return [(shard + j) % self.n_hosts for j in range(self.replication)]
+
+    def takeover(self, dead: int, shard: int) -> Optional[int]:
+        """First surviving owner of ``shard`` when ``dead`` fails."""
+        for h in self.owners(shard):
+            if h != dead:
+                return h
+        return None
+
+    def reassignment(self, dead: int) -> Dict[int, int]:
+        """shard -> takeover host, for every shard ``dead`` held a copy of."""
+        out = {}
+        for s in range(self.n_shards):
+            if dead in self.owners(s):
+                t = self.takeover(dead, s)
+                if t is not None:
+                    out[s] = t
+        return out
+
+
+class ResilientLoop:
+    """Checkpointed step loop with deterministic failure replay.
+
+    ``step_fn(state, batch) -> state`` must be pure in its inputs;
+    ``batches`` provides ``n_steps`` and ``batches(step) -> batch``.
+    ``failure_hook(step)`` (tests, chaos injection) runs before each step
+    and may raise ``StepFailure``. ``state_shardings`` (a tree of
+    ``jax.sharding.Sharding`` matching the state) is forwarded to every
+    restore so replayed/resumed state lands back on the mesh instead of
+    unsharded on one device.
+    """
+
+    def __init__(self, step_fn: Callable, ckpt: CheckpointManager, *,
+                 ckpt_every: int = 100,
+                 failure_hook: Optional[Callable[[int], None]] = None,
+                 max_failures: Optional[int] = None,
+                 state_shardings=None):
+        self.step_fn = step_fn
+        self.ckpt = ckpt
+        self.ckpt_every = ckpt_every
+        self.failure_hook = failure_hook
+        self.max_failures = max_failures
+        self.state_shardings = state_shardings
+
+    def run(self, state, batches, *, resume: bool = False):
+        """Run to ``batches.n_steps``; returns ``(state, steps_completed)``."""
+        n_steps = int(batches.n_steps)
+        step = 0
+        if resume and self.ckpt.all_steps():
+            state, step = self.ckpt.restore(state,
+                                            shardings=self.state_shardings)
+        failures = 0
+        while step < n_steps:
+            if self.ckpt_every and step % self.ckpt_every == 0:
+                self.ckpt.save(step, state)
+            try:
+                if self.failure_hook is not None:
+                    self.failure_hook(step)
+                state = self.step_fn(state, batches(step))
+                step += 1
+            except StepFailure:
+                failures += 1
+                if self.max_failures is not None and failures > self.max_failures:
+                    raise
+                self.ckpt.wait()        # an async save may be in flight
+                if not self.ckpt.all_steps():
+                    raise
+                state, step = self.ckpt.restore(
+                    state, shardings=self.state_shardings)
+        if self.ckpt_every and self.ckpt.latest_step() != step:
+            self.ckpt.save(step, state)      # final state must be durable
+        self.ckpt.wait()
+        return state, step

@@ -1,0 +1,61 @@
+"""Quantized gradient reduction with error feedback.
+
+The data-parallel psum is the bandwidth bill of distributed training; int8
+quantization cuts it 4x vs f32. The residual each step is carried in an
+error-feedback buffer and added back before the next quantization, so the
+bias of rounding does not accumulate (1-bit-Adam / EF-SGD style — the
+compressed mean converges to the true mean over steps).
+
+Protocol per leaf, inside shard_map over the data axis:
+  scale = pmax(max|g + ef|) / 127          (one scalar collective)
+  q     = round((g + ef) / scale)  int8
+  mean  = reduce(q) * scale / n            (see below)
+  ef'   = (g + ef) - q * scale             (local residual, no comm)
+
+Wire strategy for the reduce: an int8 all_gather moves (n-1)*S bytes per
+device versus ~8S for a ring f32 allreduce, so gathering int8 wins for
+axis sizes up to ``_GATHER_MAX`` and we fall back to an int32 psum beyond
+that (no bandwidth win at large n without a requantizing ring, which XLA
+cannot express; the quantization itself still pays for 4x smaller
+*checkpoint/offload* traffic and keeps the error-feedback contract).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_QMAX = 127.0
+_GATHER_MAX = 8      # largest axis where int8 all_gather beats f32 allreduce
+
+
+def init_ef(tree):
+    """Zero error-feedback buffers matching a gradient tree (f32)."""
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), tree)
+
+
+def compressed_psum_mean(g, axis_name: str, ef):
+    """One leaf: int8-quantized psum-mean. Returns (mean, new_ef)."""
+    v = g.astype(jnp.float32) + ef
+    scale = jax.lax.pmax(jnp.max(jnp.abs(v)), axis_name) / _QMAX
+    scale = jnp.maximum(scale, jnp.float32(1e-30))
+    q = jnp.clip(jnp.round(v / scale), -_QMAX, _QMAX).astype(jnp.int8)
+    n = jax.lax.psum(1, axis_name)
+    if n <= _GATHER_MAX:
+        # int8 stays int8 on the wire; accumulate locally in int32
+        gathered = jax.lax.all_gather(q, axis_name)
+        total = jnp.sum(gathered.astype(jnp.int32), axis=0)
+    else:
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    mean = total.astype(jnp.float32) * (scale / n)
+    new_ef = v - q.astype(jnp.float32) * scale
+    return mean.astype(g.dtype), new_ef
+
+
+def tree_compressed_psum_mean(grads, axis_name: str, ef):
+    """Whole-tree compressed psum-mean. Returns (mean_tree, new_ef_tree)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    ef_leaves = treedef.flatten_up_to(ef)
+    pairs = [compressed_psum_mean(g, axis_name, e)
+             for g, e in zip(leaves, ef_leaves)]
+    return (jax.tree.unflatten(treedef, [m for m, _ in pairs]),
+            jax.tree.unflatten(treedef, [e for _, e in pairs]))

@@ -1,0 +1,214 @@
+"""Shard-mapped center-star MSA: the paper's Fig. 3 pipeline on a mesh.
+
+Spark terms -> mesh terms:
+
+  RDD of sequence shards     leading-dim sharding over the 'data' axis
+  broadcast(center, index)   replicated operands (PartitionSpec())
+  map(1)  align-to-center    jitted ``core.msa.kmer_align_batch`` /
+                             ``core.pairwise.align_many_to_one`` per shard
+  reduce(1) merge profiles   local columnwise max, then one ``pmax``
+  map(2)  re-emit rows       ``core.centerstar.build_rows`` per shard
+
+``distributed_center_star`` builds the whole pipeline as ONE jitted
+function so XLA fuses the stages and the only cross-device traffic is the
+(num_slots,) int32 profile pmax — the paper's observation that center-star
+reduces to an embarrassingly parallel map plus a tiny reduction.
+
+Shard-count bookkeeping: shard_map needs the sequence count to divide the
+data-axis size; ``pad_rows`` adds empty-query rows (length 0) that align to
+all-gap rows and contribute nothing to the merged profile, and
+``unpad_rows`` drops them again.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..core import centerstar, pairwise
+from ..core import msa as msa_mod
+from . import sharding as sh
+
+
+def pad_rows(x, multiple_of: int, fill=0):
+    """Pad the leading dim up to a multiple of ``multiple_of``.
+
+    Returns (padded, original_n). For query batches pass ``fill=0`` (a valid
+    alphabet code) and pad the matching ``lens`` with 0 so padded rows align
+    as empty queries.
+    """
+    import numpy as np
+    x = np.asarray(x)
+    n = x.shape[0]
+    rem = (-n) % multiple_of
+    if rem == 0:
+        return x, n
+    pad = np.full((rem,) + x.shape[1:], fill, x.dtype)
+    return np.concatenate([x, pad], axis=0), n
+
+
+def unpad_rows(x, n: int):
+    """Drop the rows ``pad_rows`` added."""
+    return x[:n]
+
+
+def _pad_cols(x, width: int, fill):
+    if x.shape[-1] >= width:
+        return x
+    cfg = [(0, 0)] * (x.ndim - 1) + [(0, width - x.shape[-1])]
+    return jnp.pad(x, cfg, constant_values=fill)
+
+
+def _chunked(f, n_chunks: int, *arrs):
+    """Run ``f`` over ``n_chunks`` sequential slices of the leading dim.
+
+    Bounds per-device temp memory (the DP direction matrices live only for
+    one chunk); the chunk loop is a lax.map so it stays inside jit.
+    """
+    if n_chunks <= 1:
+        return f(*arrs)
+    resh = tuple(a.reshape((n_chunks, a.shape[0] // n_chunks) + a.shape[1:])
+                 for a in arrs)
+    out = jax.lax.map(lambda xs: f(*xs), resh)
+    return jax.tree.map(lambda o: o.reshape((-1,) + o.shape[2:]), out)
+
+
+def distributed_center_star(mesh: Mesh, *, method: str, sub, gap_code: int,
+                            out_len: int, num_slots: int, gap_open: int,
+                            gap_extend: int, k: int = 11, stride: int = 1,
+                            max_anchors: int = 256, max_seg: int = 64,
+                            map_chunks: int = 1, data_axis: str = "data",
+                            fallback: str = "dp", local: bool = False):
+    """Build the jitted distributed pipeline for one problem geometry.
+
+    Returns ``fn(Q, lens, center, lc, table)`` (``table`` only for
+    ``method='kmer'``) -> ``(rows, G)`` where ``rows`` is (N, out_len) int8
+    sharded over ``data_axis`` and ``G`` the merged (num_slots,) insert
+    profile, replicated. Inputs are placed with ``sharding.shard_rows`` /
+    ``sharding.broadcast``; N must divide the data-axis size (``pad_rows``).
+
+    ``fallback='dp'`` re-aligns pairs whose k-mer chaining failed with the
+    full Gotoh DP in-graph (matches the host driver exactly);
+    ``fallback='none'`` skips that second pass — the right trade at the
+    ultra-large benchmark sizes where chain failures are rare and the DP
+    lowering dominates compile time.
+    """
+    if method not in ("kmer", "plain", "sw"):
+        raise ValueError(f"unknown method {method!r}")
+    sub = jnp.asarray(sub, jnp.float32)
+
+    def _map1_dp(Q, lens, center, lc, *, dp_local=local):
+        res = pairwise.align_many_to_one(
+            Q, lens, center, lc, sub, gap_open=gap_open,
+            gap_extend=gap_extend, local=dp_local, gap_code=gap_code)
+        return res.a_row, res.b_row
+
+    def _map1_kmer(Q, lens, center, lc, table):
+        a_rows, b_rows, ok = msa_mod.kmer_align_batch(
+            Q, lens, center, lc, table, sub, k=k, stride=stride,
+            max_anchors=max_anchors, max_seg=max_seg, gap_open=gap_open,
+            gap_extend=gap_extend, gap_code=gap_code)
+        if fallback == "dp":
+            # the kmer assembly is global; its fallback must be too
+            da, db = _map1_dp(Q, lens, center, lc, dp_local=False)
+            width = max(a_rows.shape[-1], da.shape[-1])
+            a_rows = jnp.where(ok[:, None], _pad_cols(a_rows, width, gap_code),
+                               _pad_cols(da, width, gap_code))
+            b_rows = jnp.where(ok[:, None], _pad_cols(b_rows, width, gap_code),
+                               _pad_cols(db, width, gap_code))
+        return a_rows, b_rows
+
+    def _shard_fn(*operands):
+        if method == "kmer":
+            Q, lens, center, lc, table = operands
+            a_rows, b_rows = _chunked(
+                lambda q, l: _map1_kmer(q, l, center, lc, table),
+                map_chunks, Q, lens)
+        else:
+            Q, lens, center, lc = operands
+            a_rows, b_rows = _chunked(
+                lambda q, l: _map1_dp(q, l, center, lc), map_chunks, Q, lens)
+        g = centerstar.gap_profiles(a_rows, b_rows, gap_code=gap_code,
+                                    num_slots=num_slots)
+        G = jax.lax.pmax(jnp.max(g, axis=0), data_axis)          # reduce(1)
+        rows = _chunked(
+            lambda a, b: centerstar.build_rows(a, b, G, gap_code=gap_code,
+                                               out_len=out_len),
+            map_chunks, a_rows, b_rows)
+        return rows, G
+
+    row2 = P(data_axis, None)
+    row1 = P(data_axis)
+    if method == "kmer":
+        in_specs = (row2, row1, P(), P(), P())
+    else:
+        in_specs = (row2, row1, P(), P())
+    fn = sh.shard_map(_shard_fn, mesh, in_specs=in_specs,
+                      out_specs=(row2, P()), check_vma=False)
+    return jax.jit(fn)
+
+
+def center_row(center, lc, G, *, gap_code: int, out_len: int):
+    """The broadcast center's own row in the merged frame (host-side wrap)."""
+    return centerstar.center_msa_row(center, lc, G, gap_code=gap_code,
+                                     out_len=out_len)
+
+
+def msa_over_mesh(seqs, cfg, mesh: Mesh, *, data_axis: str = "data",
+                  map_chunks: int = 1, out_pad: int = 64):
+    """Host driver: ``core.msa.center_star_msa`` semantics over a mesh.
+
+    Handles everything the jitted pipeline cannot: center selection,
+    padding the query count to the shard count, placing operands
+    (``shard_rows``/``broadcast``), appending the center's own row, and
+    trimming to the realized width. ``cfg`` is a ``core.msa.MSAConfig``.
+    Returns a ``core.msa.MSAResult`` (``n_fallback=-1``: per-pair fallback
+    counts are not tracked across shards).
+    """
+    import numpy as np
+
+    from ..core import kmer_index
+
+    alpha = cfg.alpha()
+    gap = alpha.gap_code
+    S, lens = msa_mod.encode_for_msa(seqs, cfg)
+    N, Lmax = S.shape
+    if N < 2:
+        return msa_mod.MSAResult(np.asarray(S), 0, 0, Lmax)
+    cidx = msa_mod._select_center(S, lens, cfg)
+    center, lc = S[cidx], lens[cidx]
+    others = np.array([i for i in range(N) if i != cidx])
+    n_shards = sh.axis_size(mesh, data_axis)
+    # per-shard row count must also divide map_chunks for _chunked's reshape
+    Q, n_q = pad_rows(np.asarray(S)[others], n_shards * map_chunks)
+    qlens, _ = pad_rows(np.asarray(lens)[others], n_shards * map_chunks)
+
+    out_len = 2 * Lmax + out_pad
+    num_slots = int(center.shape[0]) + 1
+    fn = distributed_center_star(
+        mesh, method=cfg.method, sub=cfg.matrix(), gap_code=gap,
+        out_len=out_len, num_slots=num_slots, gap_open=cfg.gap_open,
+        gap_extend=cfg.gap_extend, k=cfg.k, stride=cfg.stride,
+        max_anchors=cfg.max_anchors, max_seg=cfg.max_seg,
+        map_chunks=map_chunks, data_axis=data_axis, local=cfg.local)
+    operands = [sh.shard_rows(Q, mesh, data_axis),
+                sh.shard_rows(qlens, mesh, data_axis),
+                sh.broadcast(center, mesh), jnp.int32(lc)]
+    if cfg.method == "kmer":
+        operands.append(sh.broadcast(
+            kmer_index.build_center_index(center, lc, k=cfg.k), mesh))
+    rows, G = fn(*operands)
+
+    width = centerstar.msa_width(G, int(lc))
+    if width > out_len:
+        raise ValueError(
+            f"merged width {width} exceeds out_len {out_len}; rerun with a "
+            f"larger out_pad (sequences too diverged for 2*Lmax)")
+    crow = center_row(center, lc, G, gap_code=gap, out_len=out_len)
+    msa = np.full((N, out_len), gap, np.int8)
+    msa[others] = unpad_rows(np.asarray(rows), n_q)
+    msa[cidx] = np.asarray(crow)
+    return msa_mod.MSAResult(msa[:, :width], int(cidx), -1, width)

@@ -1,0 +1,90 @@
+"""Named-axis sharding helpers shared by the planner, mapreduce, and tests.
+
+Also home of the repo's single ``shard_map`` import: jax moved shard_map
+from ``jax.experimental.shard_map`` (kwarg ``check_rep``) to ``jax.shard_map``
+(kwarg ``check_vma``); the wrapper below accepts either keyword and forwards
+to whichever implementation the installed jax provides. Import it from here
+(or ``repro.dist``) instead of from jax directly.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+try:                                      # jax >= 0.6 style
+    from jax import shard_map as _shard_map
+    _NEW_API = True
+except ImportError:                       # jax 0.4/0.5 style
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _NEW_API = False
+
+Axes = Union[str, Tuple[str, ...], None]
+
+
+def shard_map(f, mesh, in_specs, out_specs, **kwargs):
+    """Version-portable shard_map. ``check_vma``/``check_rep`` both accepted."""
+    check = kwargs.pop("check_vma", kwargs.pop("check_rep", None))
+    if check is not None:
+        kwargs["check_vma" if _NEW_API else "check_rep"] = check
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)
+
+
+def axis_size(mesh: Mesh, axes: Axes) -> int:
+    """Product of the mesh extents of ``axes`` (str, tuple, or None)."""
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def maybe(mesh: Mesh, dim: int, axes: Axes) -> Axes:
+    """``axes`` if ``dim`` divides over them, else None (replicate)."""
+    if axes is None or (not isinstance(axes, str) and len(axes) == 0):
+        return None
+    return axes if dim % axis_size(mesh, axes) == 0 else None
+
+
+def first_fit(mesh: Mesh, dim: int, *candidates: Axes) -> Axes:
+    """First candidate axis (group) that divides ``dim``; None replicates.
+
+    ``first_fit(mesh, d, "model", ("pod", "data"), None)`` expresses the
+    planner's preference order in one call.
+    """
+    for cand in candidates:
+        if cand is None:
+            return None
+        if dim % axis_size(mesh, cand) == 0:
+            return cand
+    return None
+
+
+def row_spec(ndim: int, axis: Axes = "data") -> P:
+    """PartitionSpec sharding only the leading dim over ``axis``."""
+    return P(axis, *([None] * (ndim - 1)))
+
+
+def shard_rows(x, mesh: Mesh, axis: Axes = "data"):
+    """Place ``x`` with its leading dim sharded over ``axis``.
+
+    The leading extent must divide the axis size — pad first with
+    ``mapreduce.pad_rows`` when it does not.
+    """
+    x = jax.numpy.asarray(x)
+    n = axis_size(mesh, axis)
+    if x.shape[0] % n != 0:
+        raise ValueError(
+            f"leading dim {x.shape[0]} does not divide axis {axis!r} "
+            f"(size {n}); pad with repro.dist.mapreduce.pad_rows first")
+    return jax.device_put(x, NamedSharding(mesh, row_spec(x.ndim, axis)))
+
+
+def broadcast(x, mesh: Mesh):
+    """Replicate ``x`` on every device of the mesh (Spark's broadcast var)."""
+    return jax.device_put(jax.numpy.asarray(x), NamedSharding(mesh, P()))

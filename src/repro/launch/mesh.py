@@ -29,5 +29,11 @@ def make_local_mesh(shape=(1, 1), axes=("data", "model")):
     n = 1
     for s in shape:
         n *= s
-    dev = np.asarray(jax.devices()[:n]).reshape(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — use a "
+            f"smaller --mesh or force host devices via XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n}")
+    dev = np.asarray(devices[:n]).reshape(shape)
     return jax.sharding.Mesh(dev, axes)

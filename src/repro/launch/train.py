@@ -26,7 +26,11 @@ def main():
                     help="use the reduced smoke config (CPU-friendly)")
     ap.add_argument("--mesh", default="1x1",
                     help="data x model, e.g. 4x2 (needs that many devices)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the newest checkpoint in --ckpt-dir first")
     args = ap.parse_args()
+    if args.resume and not args.ckpt_dir:
+        ap.error("--resume requires --ckpt-dir")
 
     import jax
     import jax.numpy as jnp
@@ -79,19 +83,23 @@ def main():
     t0 = time.time()
     if args.ckpt_dir:
         cm = CheckpointManager(args.ckpt_dir, keep=3)
-        loop = ResilientLoop(step_and_log, cm, ckpt_every=args.ckpt_every)
+        loop = ResilientLoop(step_and_log, cm, ckpt_every=args.ckpt_every,
+                             state_shardings=state_sh)
 
         class B:
             n_steps = args.steps
 
             def __call__(self, s):
                 return batches(s)
-        state, steps = loop.run(state, B())
+        state, steps = loop.run(state, B(), resume=args.resume)
     else:
         for s in range(args.steps):
             state = step_and_log(state, batches(s))
         steps = args.steps
     dt = time.time() - t0
+    if last["m"] is None:        # --resume past --steps: nothing left to run
+        print(f"done: already at step {steps}, no steps to run")
+        return
     m = jax.tree.map(float, last["m"])
     print(f"done: {steps} steps in {dt:.1f}s "
           f"({dt / max(steps, 1) * 1e3:.0f} ms/step) loss={m['loss']:.4f} "

@@ -65,9 +65,12 @@ def ssd_chunked(x, dt, A, Bm, Cm, *, chunk: int = 128,
 
     # intra-chunk (quadratic form): y_i += sum_{j<=i} (C_i.B_j) e^{cs_i-cs_j} dt_j x_j
     CB = jnp.einsum("bnis,bnjs->bnij", Cc, Bc)               # (B,nc,Q,Q)
-    decay = jnp.exp(cs[:, :, :, None, :] - cs[:, :, None, :, :])  # (B,nc,i,j,nh)
-    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
-    L = jnp.where(mask[None, None, :, :, None], decay, 0.0)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]       # (B,nc,i,j,nh)
+    # mask BEFORE exp: for i<j the exponent is positive and exp overflows to
+    # inf; where(mask, inf, 0) is fine forward but its backward emits
+    # 0 * inf = NaN. Inside the mask (i>=j) cs is non-increasing so diff<=0.
+    L = jnp.where(mask, jnp.exp(jnp.where(mask, diff, 0.0)), 0.0)
     y_intra = jnp.einsum("bnij,bnijh,bnjh,bnjhp->bnihp",
                          CB, L, dtc, xc.astype(jnp.float32))
 

@@ -1,0 +1,107 @@
+"""Seeded stand-in for the tiny hypothesis subset test_property.py uses.
+
+The CI image does not ship hypothesis; when it is installed the real
+library is used (see the try/except in test_property.py) and this module is
+ignored. The fallback draws ``max_examples`` deterministic samples per
+test, always starting with the strategy's boundary values so the cheap
+edge cases are never missed. No shrinking — failures print the drawn
+arguments instead.
+"""
+from __future__ import annotations
+
+import random
+
+
+class _Strategy:
+    def boundary(self):
+        return []
+
+    def example(self, rng):
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, min_value=0, max_value=0):
+        self.lo, self.hi = min_value, max_value
+
+    def boundary(self):
+        return [self.lo, self.hi]
+
+    def example(self, rng):
+        return rng.randint(self.lo, self.hi)
+
+
+class _Text(_Strategy):
+    def __init__(self, alphabet="abc", min_size=0, max_size=10):
+        self.alphabet, self.lo, self.hi = alphabet, min_size, max_size
+
+    def boundary(self):
+        return [self.alphabet[0] * self.lo]
+
+    def example(self, rng):
+        n = rng.randint(self.lo, self.hi)
+        return "".join(rng.choice(self.alphabet) for _ in range(n))
+
+
+class _Lists(_Strategy):
+    def __init__(self, elements, min_size=0, max_size=10):
+        self.el, self.lo, self.hi = elements, min_size, max_size
+
+    def boundary(self):
+        rng = random.Random(0)
+        return [[self.el.example(rng) for _ in range(self.lo)]]
+
+    def example(self, rng):
+        n = rng.randint(self.lo, self.hi)
+        return [self.el.example(rng) for _ in range(n)]
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value=0, max_value=0):
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def text(alphabet="abc", min_size=0, max_size=10):
+        return _Text(alphabet, min_size, max_size)
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        return _Lists(elements, min_size, max_size)
+
+
+def settings(max_examples=20, deadline=None, **_):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        # NOTE: no functools.wraps — pytest must see a zero-arg signature,
+        # not the original one (it would resolve the params as fixtures).
+        def wrapper():
+            n = getattr(wrapper, "_max_examples", 20)
+            rng = random.Random(1234)
+            cases = []
+            bounds = [s.boundary() for s in strats]
+            if all(bounds):
+                # full cross-product (capped) so no strategy's boundary is
+                # dropped when lists differ in length (zip would truncate)
+                import itertools
+                for combo in itertools.islice(itertools.product(*bounds), 8):
+                    cases.append(list(combo))
+            while len(cases) < n:
+                cases.append([s.example(rng) for s in strats])
+            for drawn in cases:
+                try:
+                    fn(*drawn)
+                except Exception:
+                    print(f"falsifying example ({fn.__name__}): {drawn!r}")
+                    raise
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper._max_examples = getattr(fn, "_max_examples", 20)
+        return wrapper
+    return deco

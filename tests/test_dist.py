@@ -7,10 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.dist import collectives as col
+from repro.dist import shard_map
 from repro.dist import grad_compression as gc
 from repro.dist import mapreduce, sharding as sh
 from repro.dist.checkpoint import CheckpointManager

@@ -1,7 +1,10 @@
 """Hypothesis property tests on system invariants."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # CI image has no hypothesis; seeded fallback
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import alphabet as ab
 from repro.core import nj as nj_mod
