@@ -87,6 +87,27 @@ def table4_protein_msa():
     emit("table4/protein/progressive_baseline", us, f"avgSP={sp:.1f}")
 
 
+def backend_matrix(smoke: bool = False):
+    """repro.align backend x method timing rows (engine dispatch).
+
+    The CI smoke artifact (BENCH_msa.json) tracks this table so backend
+    regressions show up in the bench trajectory. ``smoke`` shrinks the
+    family so the interpreted Pallas kernel stays in CI budget.
+    """
+    n, length = (6, 96) if smoke else (12, 512)
+    fam = _family(n, length, seed=2)
+    warm = fam.seqs[:3]
+    for backend in ("jnp", "pallas", "banded"):
+        for method in ("plain", "kmer"):
+            cfg = MSAConfig(method=method, k=8, max_anchors=64, max_seg=48,
+                            backend=backend, band=96)
+            _run(warm, cfg, ab.DNA)
+            us, sp, res = _run(fam.seqs, cfg, ab.DNA)
+            emit(f"bench/msa/{backend}/{method}", us,
+                 f"avgSP={sp:.1f};N={len(fam.seqs)};L={length};"
+                 f"fallback={res.n_fallback}")
+
+
 def linear_scaling_in_n():
     """HAlign-II's O(n) scaling in sequence count for fixed length."""
     base = None
@@ -104,6 +125,7 @@ def main():
     table2_genome_msa()
     table3_rna_msa()
     table4_protein_msa()
+    backend_matrix()
     linear_scaling_in_n()
 
 

@@ -30,5 +30,10 @@ def time_host(fn, *args, repeats: int = 1):
     return dt * 1e6, out
 
 
+ROWS: list[dict] = []       # every emit() lands here; run.py can dump JSON
+
+
 def emit(name: str, us: float, derived):
     print(f"{name},{us:.1f},{derived}")
+    ROWS.append({"name": name, "us_per_call": round(us, 1),
+                 "derived": str(derived)})

@@ -1,24 +1,50 @@
 """Benchmark harness: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows:
-  table2/* — genome MSA (paper Table 2): plain vs k-mer center star
-  table3/* — RNA MSA (Table 3)
-  table4/* — protein MSA (Table 4): SW vs NW center star
-  table5/* — phylogeny construction (Table 5): NJ vs HPTree cluster-merge
-  fig5/*   — memory per device from the dry-run artifacts (Figure 5)
-  fig6/*   — per-worker shard scaling (Figure 6)
-  scaling/*— O(n) sequence-count scaling
+  table2/*    — genome MSA (paper Table 2): plain vs k-mer center star
+  table3/*    — RNA MSA (Table 3)
+  table4/*    — protein MSA (Table 4): SW vs NW center star
+  table5/*    — phylogeny construction (Table 5): NJ vs HPTree cluster-merge
+  fig5/*      — memory per device from the dry-run artifacts (Figure 5)
+  fig6/*      — per-worker shard scaling (Figure 6)
+  bench/msa/* — repro.align backend x method matrix (engine dispatch)
+  scaling/*   — O(n) sequence-count scaling
 Run the multi-pod dry-run separately: ``python -m repro.launch.dryrun --all``.
+
+``--smoke`` runs only the small backend matrix (the CI smoke step);
+``--json PATH`` additionally writes every emitted row as JSON — CI
+uploads ``BENCH_msa.json`` as an artifact so the bench trajectory is
+tracked per commit.
 """
 from __future__ import annotations
 
+import argparse
+import json
+
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small subset: backend x method matrix only")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write emitted rows as JSON to PATH")
+    args = ap.parse_args()
+
+    from . import common
     print("name,us_per_call,derived")
-    from . import bench_msa, bench_scaling, bench_tree
-    bench_msa.main()
-    bench_tree.main()
-    bench_scaling.main()
+    if args.smoke:
+        from . import bench_msa
+        bench_msa.backend_matrix(smoke=True)
+    else:
+        from . import bench_msa, bench_scaling, bench_tree
+        bench_msa.main()
+        bench_tree.main()
+        bench_scaling.main()
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(common.ROWS, f, indent=1)
+        print(f"# wrote {len(common.ROWS)} rows to {args.json}")
 
 
 if __name__ == "__main__":

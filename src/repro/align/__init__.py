@@ -1,0 +1,9 @@
+"""repro.align — the backend-dispatching engine for the map(1) stage.
+
+See ``engine.AlignEngine`` (host API: bucketing + fallback),
+``backends`` (the jnp / pallas / banded primitives and the BACKENDS
+registry), ``banded`` (O(n·W) diagonal-band Gotoh), and ``bucketing``
+(power-of-two length buckets).
+"""
+from .backends import BACKENDS, BatchAlignment, resolve_backend  # noqa: F401
+from .engine import AlignEngine, EngineResult  # noqa: F401

@@ -1,0 +1,98 @@
+"""The AlignEngine backend protocol and its three implementations.
+
+Every backend is a jit-compatible batched map(1) primitive with one
+contract (``BatchAlignment``): align queries ``Q (B, n)`` with lengths
+``lens`` against one broadcast target ``b (m,)`` of length ``lb`` and
+return gap-padded aligned rows of width ``n + m`` plus per-pair ``ok``
+flags (False = the backend's heuristic gave up and the pair needs a
+full-DP re-alignment — only the ``banded`` backend ever clears it).
+
+  jnp     the row-scan Gotoh oracle (``core.pairwise``); O(n·m) dirs
+  pallas  the ``kernels.sw`` Pallas kernel (compiled on TPU, interpreted
+          elsewhere) + the shared traceback; O(n·m) dirs in HBM, row
+          scores never leave VMEM
+  banded  diagonal band, O(n·W) dirs, per-pair overflow flags
+
+All three are registered in ``BACKENDS`` so the engine, the shard_map
+pipeline, and the benchmarks dispatch by name.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import pairwise
+from ..kernels.sw.ops import gotoh_forward_pallas
+from . import banded as banded_mod
+
+
+class BatchAlignment(NamedTuple):
+    score: jnp.ndarray      # (B,) f32
+    a_row: jnp.ndarray      # (B, n+m) int8 gap-padded aligned queries
+    b_row: jnp.ndarray      # (B, n+m) int8 gap-padded aligned target
+    aln_len: jnp.ndarray    # (B,) i32 valid leading columns
+    ok: jnp.ndarray         # (B,) bool; False = needs full-DP fallback
+
+
+@functools.partial(jax.jit, static_argnames=("gap_open", "gap_extend",
+                                             "local", "gap_code"))
+def jnp_align_batch(Q, lens, b, lb, sub, *, gap_open, gap_extend,
+                    local=False, gap_code=5):
+    res = pairwise.align_many_to_one(Q, lens, b, lb, sub, gap_open=gap_open,
+                                     gap_extend=gap_extend, local=local,
+                                     gap_code=gap_code)
+    return BatchAlignment(res.score, res.a_row, res.b_row, res.aln_len,
+                          jnp.ones(Q.shape[0], jnp.bool_))
+
+
+@functools.partial(jax.jit, static_argnames=("gap_open", "gap_extend",
+                                             "local", "gap_code",
+                                             "block_rows", "interpret"))
+def pallas_align_batch(Q, lens, b, lb, sub, *, gap_open, gap_extend,
+                       local=False, gap_code=5, block_rows=128,
+                       interpret=None):
+    B, n = Q.shape
+    Bm = jnp.broadcast_to(b[None, :], (B, b.shape[0]))
+    lens2 = jnp.stack([lens.astype(jnp.int32),
+                       jnp.full((B,), lb, jnp.int32)], axis=1)
+    fwd = gotoh_forward_pallas(Q, Bm, lens2, sub, gap_open=gap_open,
+                               gap_extend=gap_extend, local=local,
+                               block_rows=min(block_rows, max(n, 1)),
+                               interpret=interpret)
+    a_row, b_row, k = jax.vmap(
+        lambda a_, b_, f: pairwise.traceback(a_, b_, f, gap_code))(Q, Bm, fwd)
+    return BatchAlignment(fwd.score, a_row, b_row, k,
+                          jnp.ones(B, jnp.bool_))
+
+
+@functools.partial(jax.jit, static_argnames=("gap_open", "gap_extend",
+                                             "band", "gap_code"))
+def banded_align_batch(Q, lens, b, lb, sub, *, gap_open, gap_extend,
+                       band=64, gap_code=5):
+    def one(q, lq):
+        fwd = banded_mod.banded_forward(q, lq, b, lb, sub, gap_open,
+                                        gap_extend, band=band)
+        a_row, b_row, k, ok = banded_mod.banded_traceback(
+            q, b, fwd, gap_code, band=band)
+        return BatchAlignment(fwd.score, a_row, b_row, k, ok)
+    return jax.vmap(one)(Q, lens.astype(jnp.int32))
+
+
+BACKENDS = {
+    "jnp": jnp_align_batch,
+    "pallas": pallas_align_batch,
+    "banded": banded_align_batch,
+}
+
+
+def resolve_backend(name: str) -> str:
+    """``auto`` → the compiled kernel on TPU, the jnp oracle elsewhere."""
+    if name == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if name not in BACKENDS:
+        raise ValueError(f"unknown align backend {name!r}; "
+                         f"expected one of {sorted(BACKENDS)} or 'auto'")
+    return name

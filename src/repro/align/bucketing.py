@@ -1,0 +1,35 @@
+"""Length-bucketed batching for the map(1) align-to-center stage.
+
+Padding every query to the global Lmax makes one 10x-long outlier
+dominate the whole shard's DP cost (the DP is O(n·m) per pair in the
+padded length n). The dispatcher groups queries into power-of-two
+length buckets and runs the backend once per bucket at that width, so a
+bucket of short reads never pays the outlier's padding. Power-of-two
+widths bound the number of distinct compiled shapes at log2(Lmax) —
+the standard trade between shape-churn recompiles and padding waste.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+
+def bucket_plan(lens, Lmax: int, *, min_bucket: int = 32
+                ) -> List[Tuple[int, np.ndarray]]:
+    """Group query indices by power-of-two padded width.
+
+    Returns ``[(width, indices), ...]`` sorted by width; widths are
+    clamped to ``[min(min_bucket, Lmax), Lmax]`` so a bucket never
+    exceeds the physical batch width and tiny buckets don't fragment.
+    """
+    lens = np.asarray(lens).astype(np.int64)
+    if lens.size == 0:
+        return []
+    w = np.maximum(lens, 1)
+    w = 1 << np.ceil(np.log2(w)).astype(np.int64)      # next pow2 >= len
+    w = np.clip(w, min(min_bucket, max(Lmax, 1)), max(Lmax, 1))
+    plan = []
+    for width in np.unique(w):
+        plan.append((int(width), np.flatnonzero(w == width)))
+    return plan

@@ -1,0 +1,202 @@
+"""AlignEngine: the single entry point for HAlign-II's map(1) stage.
+
+The three historical alignment paths (the jnp scan oracle, the Pallas SW
+kernel, and the k-mer fallback re-alignment) dispatch through this
+engine. It owns:
+
+  * backend selection (``jnp`` | ``pallas`` | ``banded``, ``auto``
+    resolves per platform — see ``backends.resolve_backend``),
+  * length-bucketed batching (``bucketing.bucket_plan``): each bucket
+    runs at its own power-of-two width instead of the global Lmax,
+  * the per-pair full-DP fallback shared by the ``banded`` backend
+    (band overflow) and the k-mer chaining path (chain failure) — the
+    merge happens device-side, no host round-trip of the row buffers.
+
+``batch_fn`` exposes the raw jit-compatible backend primitive for use
+inside jitted pipelines (``dist.mapreduce`` calls it under shard_map,
+where host-side bucketing and fallback control flow are impossible).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import backends, bucketing
+
+
+class EngineResult(NamedTuple):
+    score: jnp.ndarray      # (B,) f32
+    a_row: jnp.ndarray      # (B, P) int8 gap-padded aligned queries
+    b_row: jnp.ndarray      # (B, P) int8 aligned target rows
+    aln_len: jnp.ndarray    # (B,) i32
+    n_fallback: int         # pairs re-aligned with full DP (banded only)
+
+
+def _pad_cols(x, width: int, fill):
+    if x.shape[-1] >= width:
+        return x
+    cfg = [(0, 0)] * (x.ndim - 1) + [(0, width - x.shape[-1])]
+    return jnp.pad(x, cfg, constant_values=fill)
+
+
+@dataclasses.dataclass(frozen=True)
+class AlignEngine:
+    """One configured map(1) engine; construction is cheap, jit caches are
+    module-level (keyed on shapes + the static params below), so building
+    an engine per MSA call does not recompile."""
+    sub: jnp.ndarray
+    gap_open: int
+    gap_extend: int
+    gap_code: int = 5
+    backend: str = "auto"
+    band: int = 64
+    local: bool = False
+    block_rows: int = 128
+    interpret: Optional[bool] = None
+    bucket: bool = True
+    min_bucket: int = 32
+
+    def __post_init__(self):
+        object.__setattr__(self, "backend",
+                           backends.resolve_backend(self.backend))
+        if self.backend == "banded" and self.local:
+            # a diagonal band cannot host an anywhere-start local path
+            object.__setattr__(self, "backend", "jnp")
+
+    def batch_fn(self, *, local: Optional[bool] = None):
+        """(Q, lens, b, lb) -> BatchAlignment, safe inside jit/shard_map.
+
+        ``local`` overrides the engine's local mode for this primitive
+        (the k-mer fallback is always global even under a local engine);
+        a local override still routes ``banded`` to ``jnp``.
+        """
+        be = self.backend
+        loc = self.local if local is None else local
+        if be == "banded" and loc:
+            be = "jnp"
+
+        def fn(Q, lens, b, lb):
+            if be == "pallas":
+                return backends.pallas_align_batch(
+                    Q, lens, b, lb, self.sub, gap_open=self.gap_open,
+                    gap_extend=self.gap_extend, local=loc,
+                    gap_code=self.gap_code, block_rows=self.block_rows,
+                    interpret=self.interpret)
+            if be == "banded":
+                return backends.banded_align_batch(
+                    Q, lens, b, lb, self.sub, gap_open=self.gap_open,
+                    gap_extend=self.gap_extend, band=self.band,
+                    gap_code=self.gap_code)
+            return backends.jnp_align_batch(
+                Q, lens, b, lb, self.sub, gap_open=self.gap_open,
+                gap_extend=self.gap_extend, local=loc,
+                gap_code=self.gap_code)
+        return fn
+
+    def _full_dp_fn(self):
+        """The full-DP global primitive used for per-pair fallbacks."""
+        def fn(Q, lens, b, lb):
+            if self.backend == "pallas":
+                return backends.pallas_align_batch(
+                    Q, lens, b, lb, self.sub, gap_open=self.gap_open,
+                    gap_extend=self.gap_extend, local=False,
+                    gap_code=self.gap_code, block_rows=self.block_rows,
+                    interpret=self.interpret)
+            return backends.jnp_align_batch(
+                Q, lens, b, lb, self.sub, gap_open=self.gap_open,
+                gap_extend=self.gap_extend, local=False,
+                gap_code=self.gap_code)
+        return fn
+
+    # ------------------------------------------------------------- host API
+
+    def align_to_center(self, Q, lens, b, lb) -> EngineResult:
+        """Bucketed, fallback-handling map(1): every query against ``b``.
+
+        Q: (B, Lmax) int8, lens: (B,), b: (m,), lb scalar. Output rows are
+        (B, Lmax + m) — trailing (gap,gap) columns are dead padding the
+        center-star assembly ignores.
+        """
+        Q = jnp.asarray(Q)
+        lens = jnp.asarray(lens, jnp.int32)
+        b = jnp.asarray(b)
+        B, Lmax = Q.shape
+        m = b.shape[0]
+        P = Lmax + m
+        fn = self.batch_fn()
+
+        if not self.bucket or B == 0:
+            out = fn(Q, lens, b, lb)
+            return self._apply_fallback(out, Q, lens, b, lb, P)
+
+        plan = bucketing.bucket_plan(np.asarray(lens), Lmax,
+                                     min_bucket=self.min_bucket)
+        if len(plan) == 1:
+            width, _ = plan[0]
+            out = fn(Q[:, :width], lens, b, lb)
+            return self._apply_fallback(out, Q, lens, b, lb, P)
+
+        score = jnp.zeros((B,), jnp.float32)
+        a_rows = jnp.full((B, P), self.gap_code, jnp.int8)
+        b_rows = jnp.full((B, P), self.gap_code, jnp.int8)
+        aln_len = jnp.zeros((B,), jnp.int32)
+        ok = np.ones((B,), bool)
+        for width, idx in plan:
+            ix = jnp.asarray(idx)
+            out = fn(Q[ix, :width], lens[ix], b, lb)
+            score = score.at[ix].set(out.score)
+            a_rows = a_rows.at[ix].set(_pad_cols(out.a_row, P, self.gap_code))
+            b_rows = b_rows.at[ix].set(_pad_cols(out.b_row, P, self.gap_code))
+            aln_len = aln_len.at[ix].set(out.aln_len)
+            ok[idx] = np.asarray(out.ok)
+        merged = backends.BatchAlignment(score, a_rows, b_rows, aln_len,
+                                         jnp.asarray(ok))
+        return self._apply_fallback(merged, Q, lens, b, lb, P)
+
+    def _apply_fallback(self, out: backends.BatchAlignment, Q, lens, b, lb,
+                        P: int) -> EngineResult:
+        """Re-align pairs the backend flagged (band overflow) with full DP."""
+        bad = np.flatnonzero(~np.asarray(out.ok))
+        score = out.score
+        a_rows = _pad_cols(out.a_row, P, self.gap_code)
+        b_rows = _pad_cols(out.b_row, P, self.gap_code)
+        aln_len = out.aln_len
+        if len(bad):
+            ix = jnp.asarray(bad)
+            res = self._full_dp_fn()(Q[ix], lens[ix], b, lb)
+            score = score.at[ix].set(res.score)
+            a_rows = a_rows.at[ix].set(_pad_cols(res.a_row, P, self.gap_code))
+            b_rows = b_rows.at[ix].set(_pad_cols(res.b_row, P, self.gap_code))
+            aln_len = aln_len.at[ix].set(res.aln_len)
+        return EngineResult(score, a_rows, b_rows, aln_len, len(bad))
+
+    def realign_failed(self, Q, lens, b, lb, a_rows, b_rows, ok):
+        """Full-DP re-alignment of k-mer chain failures, merged device-side.
+
+        This replaces the old host-numpy round-trip in ``core.msa``: the
+        assembled k-mer rows stay on device; only the (B,) ok flags cross
+        to host to pick the failed subset.
+
+        Returns (a_rows, b_rows, n_fallback); widths grow to fit the DP
+        rows if needed.
+        """
+        bad = np.flatnonzero(~np.asarray(ok))
+        if len(bad) == 0:
+            return jnp.asarray(a_rows), jnp.asarray(b_rows), 0
+        Q = jnp.asarray(Q)
+        lens = jnp.asarray(lens, jnp.int32)
+        ix = jnp.asarray(bad)
+        # the k-mer assembly is global, so its fallback must be too — even
+        # under a local (Smith-Waterman) engine
+        eng = (self if not self.local
+               else dataclasses.replace(self, local=False))
+        res = eng.align_to_center(Q[ix], lens[ix], b, lb)
+        P = max(int(a_rows.shape[1]), int(res.a_row.shape[1]))
+        a_rows = _pad_cols(jnp.asarray(a_rows), P, self.gap_code)
+        b_rows = _pad_cols(jnp.asarray(b_rows), P, self.gap_code)
+        a_rows = a_rows.at[ix].set(_pad_cols(res.a_row, P, self.gap_code))
+        b_rows = b_rows.at[ix].set(_pad_cols(res.b_row, P, self.gap_code))
+        return a_rows, b_rows, len(bad)

@@ -3,10 +3,12 @@
 Pipeline (paper Fig. 3):
   1. pick the center sequence (first, or most-shared-kmers sample heuristic)
   2. map(1): align every sequence to the broadcast center
-       - 'sw' / 'plain': full Gotoh DP (protein path / original center star)
+       - 'sw' / 'plain': Gotoh DP through ``repro.align.AlignEngine``
+         (backend-dispatched: jnp scan / Pallas kernel / banded,
+         length-bucketed batching)
        - 'kmer': chain k-mer anchors, DP only on inter-anchor segments
-         (trie-accelerated path; per-pair fallback to full DP when chaining
-         fails, e.g. diverged sequences)
+         (trie-accelerated path; per-pair fallback through the engine
+         when chaining fails, e.g. diverged sequences)
   3. reduce(1): merge insert-space profiles (columnwise max)
   4. map(2): rebuild every row in the merged frame
 
@@ -20,6 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import NamedTuple, Optional, Sequence
 
 import jax
@@ -44,6 +47,9 @@ class MSAConfig:
     max_seg: int = 64                # inter-anchor DP budget
     center: str = "first"            # first | sampled
     local: bool = False              # Smith-Waterman local stage-1 alignment
+    backend: str = "auto"            # auto | jnp | pallas | banded (map(1) DP)
+    band: int = 64                   # band width for backend='banded'
+    bucket: bool = True              # length-bucketed batching in map(1)
 
     def alpha(self) -> ab.Alphabet:
         return {"dna": ab.DNA, "rna": ab.RNA, "protein": ab.PROTEIN}[self.alphabet]
@@ -53,12 +59,24 @@ class MSAConfig:
             return ab.blosum62().astype(jnp.float32)
         return ab.dna_matrix(self.match, self.mismatch).astype(jnp.float32)
 
+    def engine(self, *, bucket: Optional[bool] = None):
+        """The configured ``repro.align.AlignEngine`` for this MSA run."""
+        from ..align import AlignEngine
+        return AlignEngine(self.matrix(), gap_open=self.gap_open,
+                           gap_extend=self.gap_extend,
+                           gap_code=self.alpha().gap_code,
+                           backend=self.backend, band=self.band,
+                           local=self.local,
+                           bucket=self.bucket if bucket is None else bucket)
+
 
 class MSAResult(NamedTuple):
     msa: np.ndarray          # (N, L) int8 aligned rows, original order
     center_idx: int
-    n_fallback: int          # pairs that fell back from kmer to full DP
+    n_fallback: int          # pairs that fell back to full DP (kmer chain
+                             # failure or banded-DP band overflow)
     width: int
+    center_mode: str = "first"   # effective center selection ('first'|'sampled')
 
 
 # ---------------------------------------------------------------- k-mer path
@@ -159,68 +177,60 @@ def center_star_msa(seqs: Sequence[str] | np.ndarray,
         lens = jnp.asarray(lens)
     N, Lmax = S.shape
     if N < 2:
-        return MSAResult(np.asarray(S), 0, 0, Lmax)
+        # center selection never runs; the effective mode is trivially first
+        return MSAResult(np.asarray(S), 0, 0, Lmax, "first")
     sub = cfg.matrix()
 
-    cidx = _select_center(S, lens, cfg)
+    cidx, center_mode = _select_center(S, lens, cfg)
     center = S[cidx]
     lc = lens[cidx]
     others = np.array([i for i in range(N) if i != cidx])
     Q, qlens = S[jnp.asarray(others)], lens[jnp.asarray(others)]
 
-    n_fallback = 0
+    engine = cfg.engine()
     if cfg.method == "kmer":
         table = kmer_index.build_center_index(center, lc, k=cfg.k)
         a_rows, b_rows, ok = kmer_align_batch(
             Q, qlens, center, lc, table, sub, k=cfg.k, stride=cfg.stride,
             max_anchors=cfg.max_anchors, max_seg=cfg.max_seg,
             gap_open=cfg.gap_open, gap_extend=cfg.gap_extend, gap_code=gap)
-        ok = np.asarray(ok)
-        a_rows, b_rows = np.array(a_rows), np.array(b_rows)
-        bad = np.flatnonzero(~ok)
-        n_fallback = len(bad)
-        if n_fallback:
-            res = pairwise.align_many_to_one(
-                Q[jnp.asarray(bad)], qlens[jnp.asarray(bad)], center, lc, sub,
-                gap_open=cfg.gap_open, gap_extend=cfg.gap_extend,
-                local=False, gap_code=gap)
-            P = max(a_rows.shape[1], res.a_row.shape[1])
-            a_rows = _pad_to(a_rows, P, gap)
-            b_rows = _pad_to(b_rows, P, gap)
-            a_rows[bad] = _pad_to(np.asarray(res.a_row), P, gap)
-            b_rows[bad] = _pad_to(np.asarray(res.b_row), P, gap)
+        # chain failures re-align through the engine; rows stay on device
+        a_rows, b_rows, n_fallback = engine.realign_failed(
+            Q, qlens, center, lc, a_rows, b_rows, ok)
     else:
-        res = pairwise.align_many_to_one(
-            Q, qlens, center, lc, sub, gap_open=cfg.gap_open,
-            gap_extend=cfg.gap_extend, local=cfg.local, gap_code=gap)
-        a_rows, b_rows = np.asarray(res.a_row), np.asarray(res.b_row)
+        res = engine.align_to_center(Q, qlens, center, lc)
+        a_rows, b_rows, n_fallback = res.a_row, res.b_row, res.n_fallback
 
     num_slots = int(center.shape[0]) + 1
-    g = centerstar.gap_profiles(jnp.asarray(a_rows), jnp.asarray(b_rows),
+    g = centerstar.gap_profiles(a_rows, b_rows,
                                 gap_code=gap, num_slots=num_slots)
     G = centerstar.merge_profiles(g)
     width = centerstar.msa_width(G, int(lc))
 
-    rows = centerstar.build_rows(jnp.asarray(a_rows), jnp.asarray(b_rows), G,
+    rows = centerstar.build_rows(a_rows, b_rows, G,
                                  gap_code=gap, out_len=width)
     crow = centerstar.center_msa_row(center, lc, G, gap_code=gap, out_len=width)
 
     msa = np.full((N, width), gap, np.int8)
     msa[others] = np.asarray(rows)
     msa[cidx] = np.asarray(crow)
-    return MSAResult(msa, int(cidx), n_fallback, width)
+    return MSAResult(msa, int(cidx), n_fallback, width, center_mode)
 
 
-def _pad_to(x: np.ndarray, P: int, gap: int) -> np.ndarray:
-    if x.shape[-1] >= P:
-        return x
-    pad = np.full(x.shape[:-1] + (P - x.shape[-1],), gap, x.dtype)
-    return np.concatenate([x, pad], axis=-1)
+def _select_center(S, lens, cfg: MSAConfig) -> tuple[int, str]:
+    """Pick the center row; returns (index, effective mode).
 
-
-def _select_center(S, lens, cfg: MSAConfig) -> int:
-    if cfg.center == "first" or S.shape[0] <= 2 or cfg.alphabet == "protein":
-        return 0
+    ``center='sampled'`` needs the k-mer index, which only exists for
+    nucleotide alphabets — for proteins the request silently downgraded
+    before; now it warns and reports ``center_mode='first'`` in MSAResult.
+    """
+    if cfg.center == "first" or S.shape[0] <= 2:
+        return 0, "first"
+    if cfg.alphabet == "protein":
+        warnings.warn(
+            "center='sampled' is unsupported for protein alphabets (no "
+            "k-mer index); falling back to center='first'", stacklevel=2)
+        return 0, "first"
     # 'sampled': index sequence 0, pick the sequence sharing the most k-mers —
     # the paper's "contains the most segments among all sequences" heuristic.
     table = kmer_index.build_center_index(S[0], lens[0], k=cfg.k)
@@ -231,7 +241,7 @@ def _select_center(S, lens, cfg: MSAConfig) -> int:
         cand = table[jnp.clip(codes, 0), 0]          # first occurrence column
         return jnp.sum((codes >= 0) & (cand != kmer_index.EMPTY))
     h = jax.vmap(hits)(S, lens)
-    return int(jnp.argmax(h))
+    return int(jnp.argmax(h)), "sampled"
 
 
 def decode_msa(msa: np.ndarray, cfg: MSAConfig) -> list[str]:

@@ -5,7 +5,8 @@ Spark terms -> mesh terms:
   RDD of sequence shards     leading-dim sharding over the 'data' axis
   broadcast(center, index)   replicated operands (PartitionSpec())
   map(1)  align-to-center    jitted ``core.msa.kmer_align_batch`` /
-                             ``core.pairwise.align_many_to_one`` per shard
+                             a ``repro.align`` backend primitive per shard
+                             (jnp scan, Pallas SW kernel, or banded DP)
   reduce(1) merge profiles   local columnwise max, then one ``pmax``
   map(2)  re-emit rows       ``core.centerstar.build_rows`` per shard
 
@@ -28,7 +29,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from ..core import centerstar, pairwise
+from ..align import AlignEngine
+from ..align.engine import _pad_cols
+from ..core import centerstar
 from ..core import msa as msa_mod
 from . import sharding as sh
 
@@ -55,13 +58,6 @@ def unpad_rows(x, n: int):
     return x[:n]
 
 
-def _pad_cols(x, width: int, fill):
-    if x.shape[-1] >= width:
-        return x
-    cfg = [(0, 0)] * (x.ndim - 1) + [(0, width - x.shape[-1])]
-    return jnp.pad(x, cfg, constant_values=fill)
-
-
 def _chunked(f, n_chunks: int, *arrs):
     """Run ``f`` over ``n_chunks`` sequential slices of the leading dim.
 
@@ -81,7 +77,8 @@ def distributed_center_star(mesh: Mesh, *, method: str, sub, gap_code: int,
                             gap_extend: int, k: int = 11, stride: int = 1,
                             max_anchors: int = 256, max_seg: int = 64,
                             map_chunks: int = 1, data_axis: str = "data",
-                            fallback: str = "dp", local: bool = False):
+                            fallback: str = "dp", local: bool = False,
+                            backend: str = "auto", band: int = 64):
     """Build the jitted distributed pipeline for one problem geometry.
 
     Returns ``fn(Q, lens, center, lc, table)`` (``table`` only for
@@ -89,6 +86,13 @@ def distributed_center_star(mesh: Mesh, *, method: str, sub, gap_code: int,
     sharded over ``data_axis`` and ``G`` the merged (num_slots,) insert
     profile, replicated. Inputs are placed with ``sharding.shard_rows`` /
     ``sharding.broadcast``; N must divide the data-axis size (``pad_rows``).
+
+    ``backend`` picks the map(1) DP primitive from the ``repro.align``
+    registry (jnp scan / Pallas SW kernel / banded O(n·band) DP). The
+    banded backend accepts its result in-graph without the host driver's
+    per-pair overflow fallback — re-aligning in-graph would materialize
+    the full direction matrix for every pair, exactly what banding is
+    there to avoid; size the band for the workload instead.
 
     ``fallback='dp'`` re-aligns pairs whose k-mer chaining failed with the
     full Gotoh DP in-graph (matches the host driver exactly);
@@ -99,11 +103,12 @@ def distributed_center_star(mesh: Mesh, *, method: str, sub, gap_code: int,
     if method not in ("kmer", "plain", "sw"):
         raise ValueError(f"unknown method {method!r}")
     sub = jnp.asarray(sub, jnp.float32)
+    engine = AlignEngine(sub, gap_open=gap_open, gap_extend=gap_extend,
+                         gap_code=gap_code, backend=backend, band=band,
+                         local=local, bucket=False)
 
     def _map1_dp(Q, lens, center, lc, *, dp_local=local):
-        res = pairwise.align_many_to_one(
-            Q, lens, center, lc, sub, gap_open=gap_open,
-            gap_extend=gap_extend, local=dp_local, gap_code=gap_code)
+        res = engine.batch_fn(local=dp_local)(Q, lens, center, lc)
         return res.a_row, res.b_row
 
     def _map1_kmer(Q, lens, center, lc, table):
@@ -177,8 +182,8 @@ def msa_over_mesh(seqs, cfg, mesh: Mesh, *, data_axis: str = "data",
     S, lens = msa_mod.encode_for_msa(seqs, cfg)
     N, Lmax = S.shape
     if N < 2:
-        return msa_mod.MSAResult(np.asarray(S), 0, 0, Lmax)
-    cidx = msa_mod._select_center(S, lens, cfg)
+        return msa_mod.MSAResult(np.asarray(S), 0, 0, Lmax, "first")
+    cidx, center_mode = msa_mod._select_center(S, lens, cfg)
     center, lc = S[cidx], lens[cidx]
     others = np.array([i for i in range(N) if i != cidx])
     n_shards = sh.axis_size(mesh, data_axis)
@@ -193,7 +198,8 @@ def msa_over_mesh(seqs, cfg, mesh: Mesh, *, data_axis: str = "data",
         out_len=out_len, num_slots=num_slots, gap_open=cfg.gap_open,
         gap_extend=cfg.gap_extend, k=cfg.k, stride=cfg.stride,
         max_anchors=cfg.max_anchors, max_seg=cfg.max_seg,
-        map_chunks=map_chunks, data_axis=data_axis, local=cfg.local)
+        map_chunks=map_chunks, data_axis=data_axis, local=cfg.local,
+        backend=cfg.backend, band=cfg.band)
     operands = [sh.shard_rows(Q, mesh, data_axis),
                 sh.shard_rows(qlens, mesh, data_axis),
                 sh.broadcast(center, mesh), jnp.int32(lc)]
@@ -211,4 +217,5 @@ def msa_over_mesh(seqs, cfg, mesh: Mesh, *, data_axis: str = "data",
     msa = np.full((N, out_len), gap, np.int8)
     msa[others] = unpad_rows(np.asarray(rows), n_q)
     msa[cidx] = np.asarray(crow)
-    return msa_mod.MSAResult(msa[:, :width], int(cidx), -1, width)
+    return msa_mod.MSAResult(msa[:, :width], int(cidx), -1, width,
+                             center_mode)

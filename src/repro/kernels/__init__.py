@@ -1,1 +1,19 @@
-from . import sw, distance, flash_attention  # noqa: F401
+"""Pallas kernels (SW/Gotoh, distance, flash attention) + shared helpers."""
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret(platform: str | None = None) -> bool:
+    """Platform-aware default for ``pallas_call(interpret=...)``.
+
+    The kernels in this package target the TPU backend; everywhere else
+    (CPU CI, local dev) they run under the Pallas interpreter. Callers that
+    pass ``interpret=None`` get this resolution; an explicit bool always
+    wins (e.g. to force interpret-mode debugging on TPU).
+    """
+    p = platform or jax.default_backend()
+    return p != "tpu"
+
+
+from . import sw, distance, flash_attention  # noqa: E402,F401

@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from .. import default_interpret
 from ...core.distance import jc69_distance
 from .distance_kernel import match_valid_kernel
 
@@ -13,7 +14,10 @@ from .distance_kernel import match_valid_kernel
 @functools.partial(jax.jit, static_argnames=("n_chars", "gap_code", "bn", "bl",
                                              "interpret"))
 def match_valid_pallas(msa_a, msa_b, *, n_chars: int, gap_code: int,
-                       bn: int = 128, bl: int = 128, interpret: bool = True):
+                       bn: int = 128, bl: int = 128,
+                       interpret: bool | None = None):
+    if interpret is None:
+        interpret = default_interpret()
     N, L = msa_a.shape
     M = msa_b.shape[0]
     pn, pm, pl_ = (-N) % bn, (-M) % bn, (-L) % bl
@@ -28,7 +32,7 @@ def match_valid_pallas(msa_a, msa_b, *, n_chars: int, gap_code: int,
                                              "bn", "bl", "interpret"))
 def distance_matrix_pallas(msa, *, n_chars: int, gap_code: int,
                            correct: bool = True, bn: int = 128, bl: int = 128,
-                           interpret: bool = True):
+                           interpret: bool | None = None):
     match, valid = match_valid_pallas(msa, msa, n_chars=n_chars,
                                       gap_code=gap_code, bn=bn, bl=bl,
                                       interpret=interpret)

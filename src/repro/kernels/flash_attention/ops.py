@@ -12,16 +12,18 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from .. import default_interpret
 from .flash_kernel import flash_attention_kernel
 from .ref import attention_ref
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
 def flash_attention(q, k, v, scale, causal=True, window=0, bq=128, bk=128,
-                    interpret=True):
+                    interpret=None):
     return flash_attention_kernel(q, k, v, scale=scale, causal=causal,
                                   window=window, bq=bq, bk=bk,
-                                  interpret=interpret)
+                                  interpret=default_interpret()
+                                  if interpret is None else interpret)
 
 
 def _fwd(q, k, v, scale, causal, window, bq, bk, interpret):

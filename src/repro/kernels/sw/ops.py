@@ -7,6 +7,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from .. import default_interpret
 from ...core.pairwise import ForwardResult
 from . import ref as _ref
 from .sw_kernel import gotoh_forward_kernel
@@ -16,12 +17,15 @@ from .sw_kernel import gotoh_forward_kernel
                                              "block_rows", "interpret"))
 def gotoh_forward_pallas(a, b, lens, sub, *, gap_open, gap_extend,
                          local=False, block_rows: int = 128,
-                         interpret: bool = True) -> ForwardResult:
+                         interpret: bool | None = None) -> ForwardResult:
     """Batched forward with the kernel; returns ForwardResult with the
     boundary row prepended so core.pairwise.traceback consumes it directly.
 
     a: (B, n) int8, b: (B, m) int8, lens: (B, 2) i32 [[la, lb], ...].
+    ``interpret=None`` resolves platform-aware (compiled on TPU).
     """
+    if interpret is None:
+        interpret = default_interpret()
     B, n = a.shape
     m = b.shape[1]
     npad = (-n) % block_rows

@@ -5,11 +5,14 @@ device here; a real pod under jax.distributed). The same jitted stages are
 what dryrun.py lowers for 512 devices.
 
   PYTHONPATH=src python -m repro.launch.msa_run --fasta in.fa --out out/ \
-      --method kmer --tree cluster [--dist] [--mesh 4x1]
+      --method kmer --tree cluster [--backend banded --band 128] \
+      [--dist] [--mesh 4x1]
 
 ``--dist`` routes the alignment through ``repro.dist.mapreduce`` (shard_map
 over the data axis — identical math, Spark-style execution); the default
-path is the single-host driver in ``repro.core.msa``.
+path is the single-host driver in ``repro.core.msa``. ``--backend`` picks
+the map(1) DP primitive from the ``repro.align`` registry (``auto`` =
+Pallas kernel on TPU, jnp scan elsewhere; ``banded`` = O(n·band) memory).
 """
 from __future__ import annotations
 
@@ -33,6 +36,12 @@ def main():
                     choices=["dna", "rna", "protein"])
     ap.add_argument("--tree", default="nj", choices=["nj", "cluster", "none"])
     ap.add_argument("--k", type=int, default=11)
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "jnp", "pallas", "banded"],
+                    help="map(1) DP backend (repro.align registry)")
+    ap.add_argument("--band", type=int, default=64,
+                    help="band width for --backend banded (O(n*band) "
+                         "direction memory; overflows fall back per pair)")
     ap.add_argument("--dist", action="store_true",
                     help="run the shard_map pipeline (repro.dist.mapreduce)")
     ap.add_argument("--mesh", default=None,
@@ -49,7 +58,8 @@ def main():
     names, seqs = read_fasta(args.fasta)
     alpha = {"dna": ab.DNA, "rna": ab.RNA, "protein": ab.PROTEIN}[args.alphabet]
     cfg = MSAConfig(method=args.method, alphabet=args.alphabet, k=args.k,
-                    gap_open=11 if args.alphabet == "protein" else 3)
+                    gap_open=11 if args.alphabet == "protein" else 3,
+                    backend=args.backend, band=args.band)
     t0 = time.time()
     if args.dist:
         from ..dist import mapreduce
@@ -70,8 +80,12 @@ def main():
     msa = jnp.asarray(res.msa)
     sp = float(sp_score.avg_sp(msa, gap_code=alpha.gap_code,
                                n_chars=alpha.n_chars))
+    from ..align import resolve_backend
     report = {"n_sequences": len(seqs), "width": res.width,
-              "center": names[res.center_idx], "avg_sp_penalty": sp,
+              "center": names[res.center_idx],
+              "center_mode": res.center_mode,
+              "backend": resolve_backend(args.backend),
+              "avg_sp_penalty": sp,
               # null under --dist: per-pair fallbacks aren't tracked there
               "kmer_fallbacks": res.n_fallback if res.n_fallback >= 0 else None,
               "msa_seconds": t_msa}

@@ -1,0 +1,304 @@
+"""repro.align: backend parity, banded overflow fallback, bucketing, engine."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.align import AlignEngine, BACKENDS, resolve_backend
+from repro.align import banded as banded_mod
+from repro.align import backends as be
+from repro.align.bucketing import bucket_plan
+from repro.core import alphabet as ab
+
+RNG = np.random.default_rng(7)
+
+
+def _random_case(B, n, m, n_chars, *, edge_lens=True):
+    Q = RNG.integers(0, n_chars, (B, n)).astype(np.int8)
+    b = RNG.integers(0, n_chars, (m,)).astype(np.int8)
+    lens = RNG.integers(0, n + 1, B).astype(np.int32)
+    if edge_lens:
+        lens[0] = 0            # empty query
+        lens[min(1, B - 1)] = 1  # length-1 query
+        lens[-1] = n           # full-width query
+    return jnp.asarray(Q), jnp.asarray(lens), jnp.asarray(b)
+
+
+def _run_backend(name, Q, lens, b, lb, sub, go, ge, band):
+    kw = dict(gap_open=go, gap_extend=ge, gap_code=5)
+    if name == "banded":
+        return be.banded_align_batch(Q, lens, b, lb, sub, band=band, **kw)
+    if name == "pallas":
+        return be.pallas_align_batch(Q, lens, b, lb, sub, block_rows=32, **kw)
+    return be.jnp_align_batch(Q, lens, b, lb, sub, **kw)
+
+
+@pytest.mark.parametrize("alphabet,go,ge", [("dna", 3, 1), ("protein", 11, 1)])
+@pytest.mark.parametrize("lb", [0, 1, 30])
+def test_backend_parity(alphabet, go, ge, lb):
+    """jnp, pallas, and banded (band wide enough) agree exactly on scores,
+    aligned rows, and lengths — including la=0/lb=0 and length-1 pairs."""
+    n_chars = 4 if alphabet == "dna" else 20
+    sub = (ab.dna_matrix() if alphabet == "dna"
+           else ab.blosum62()).astype(jnp.float32)
+    B, n, m = 5, 40, 36
+    Q, lens, b = _random_case(B, n, m, n_chars)
+    band = 2 * m + 4                       # full column coverage: exact DP
+    ref = _run_backend("jnp", Q, lens, b, jnp.int32(lb), sub, go, ge, band)
+    for name in ("pallas", "banded"):
+        got = _run_backend(name, Q, lens, b, jnp.int32(lb), sub, go, ge, band)
+        np.testing.assert_array_equal(np.asarray(ref.score),
+                                      np.asarray(got.score), err_msg=name)
+        np.testing.assert_array_equal(np.asarray(ref.aln_len),
+                                      np.asarray(got.aln_len), err_msg=name)
+        assert bool(jnp.all(got.ok)), name
+        for i in range(B):
+            k = int(ref.aln_len[i])
+            np.testing.assert_array_equal(
+                np.asarray(ref.a_row[i])[:k], np.asarray(got.a_row[i])[:k],
+                err_msg=f"{name} pair {i} a_row")
+            np.testing.assert_array_equal(
+                np.asarray(ref.b_row[i])[:k], np.asarray(got.b_row[i])[:k],
+                err_msg=f"{name} pair {i} b_row")
+
+
+def test_backend_parity_random_sweep():
+    """Property sweep: random geometries/params, all backends identical."""
+    for trial in range(6):
+        n = int(RNG.integers(4, 48))
+        m = int(RNG.integers(4, 48))
+        go = int(RNG.integers(2, 8))
+        ge = int(RNG.integers(1, go + 1))
+        sub = ab.dna_matrix(2, -int(RNG.integers(1, 4))).astype(jnp.float32)
+        Q, lens, b = _random_case(3, n, m, 4)
+        lb = jnp.int32(int(RNG.integers(0, m + 1)))
+        band = 2 * m + 4
+        outs = {name: _run_backend(name, Q, lens, b, lb, sub, go, ge, band)
+                for name in BACKENDS}
+        for name in ("pallas", "banded"):
+            np.testing.assert_array_equal(
+                np.asarray(outs["jnp"].score), np.asarray(outs[name].score),
+                err_msg=f"trial {trial} {name}")
+            for i in range(3):
+                k = int(outs["jnp"].aln_len[i])
+                np.testing.assert_array_equal(
+                    np.asarray(outs["jnp"].a_row[i])[:k],
+                    np.asarray(outs[name].a_row[i])[:k],
+                    err_msg=f"trial {trial} {name} pair {i}")
+
+
+def test_banded_dirs_shape_is_n_by_band():
+    """The banded forward never materializes (n+1)x(m+1) directions."""
+    n, m, W = 64, 256, 16
+    a = jnp.asarray(RNG.integers(0, 4, n).astype(np.int8))
+    b = jnp.asarray(RNG.integers(0, 4, m).astype(np.int8))
+    sub = ab.dna_matrix().astype(jnp.float32)
+    fwd = banded_mod.banded_forward(a, jnp.int32(n), b, jnp.int32(200), sub,
+                                    3, 1, band=W)
+    assert fwd.dirs.shape == (n, W)
+    assert fwd.dirs.dtype == jnp.int8
+
+
+def test_banded_overflow_falls_back_to_full_dp():
+    """A 30-column insert forces the path off the diagonal: a narrow band
+    must flag the pair and the engine must return the exact full-DP rows."""
+    pre, post = "ACGTACGTACGT", "TTGGCCAATTGG"
+    a = ab.DNA.encode(pre + post)
+    bq = ab.DNA.encode(pre + "C" * 30 + post)
+    Q = np.full((1, 64), 0, np.int8)
+    Q[0, :len(a)] = a
+    b = np.zeros((64,), np.int8)
+    b[:len(bq)] = bq
+    sub = ab.dna_matrix().astype(jnp.float32)
+
+    raw = be.banded_align_batch(jnp.asarray(Q), jnp.int32([len(a)]),
+                                jnp.asarray(b), jnp.int32(len(bq)), sub,
+                                gap_open=3, gap_extend=1, band=8, gap_code=5)
+    assert not bool(raw.ok[0])
+
+    eng = AlignEngine(sub, gap_open=3, gap_extend=1, gap_code=5,
+                      backend="banded", band=8, bucket=False)
+    ref = AlignEngine(sub, gap_open=3, gap_extend=1, gap_code=5,
+                      backend="jnp", bucket=False)
+    got = eng.align_to_center(Q, np.int32([len(a)]), b, jnp.int32(len(bq)))
+    want = ref.align_to_center(Q, np.int32([len(a)]), b, jnp.int32(len(bq)))
+    assert got.n_fallback == 1
+    np.testing.assert_array_equal(np.asarray(got.score),
+                                  np.asarray(want.score))
+    np.testing.assert_array_equal(np.asarray(got.a_row),
+                                  np.asarray(want.a_row))
+
+
+def test_banded_never_silently_suboptimal():
+    """Adversarial property: on random unequal-length pairs at a tiny
+    band, every pair the banded backend does NOT flag must score exactly
+    the full DP optimum (overflow detection has no silent escapes)."""
+    from repro.core import pairwise as pw
+    import jax
+    rng = np.random.default_rng(0)
+    B, n, m = 150, 24, 24
+    sub = ab.dna_matrix().astype(jnp.float32)
+    Q = jnp.asarray(rng.integers(0, 4, (B, n)).astype(np.int8))
+    T = jnp.asarray(rng.integers(0, 4, (B, m)).astype(np.int8))
+    las = jnp.asarray(rng.integers(1, n + 1, B).astype(np.int32))
+    lbs = jnp.asarray(rng.integers(1, m + 1, B).astype(np.int32))
+
+    @jax.jit
+    def both(q, la, t, lb):
+        ref = pw.score_only(q, la, t, lb, sub, gap_open=3, gap_extend=1)
+        fwd = banded_mod.banded_forward(q, la, t, lb, sub, 3, 1, band=8)
+        _, _, _, ok = banded_mod.banded_traceback(q, t, fwd, 5, band=8)
+        return ref, fwd.score, ok
+
+    ref, got, ok = jax.vmap(both)(Q, las, T, lbs)
+    ref, got, ok = np.asarray(ref), np.asarray(got), np.asarray(ok)
+    silent = ok & (got != ref)
+    assert not silent.any(), np.flatnonzero(silent)[:5]
+    # and the detector is not just flagging everything: exact unflagged
+    # pairs exist even in this adversarial regime
+    assert (ok & (got == ref)).sum() > 0
+
+
+def test_kmer_fallback_is_global_under_local_engine():
+    """realign_failed must force global alignment even when the engine is
+    configured local (the k-mer assembly is global)."""
+    sub = ab.dna_matrix().astype(jnp.float32)
+    rng = np.random.default_rng(2)
+    n = 40
+    Q = jnp.asarray(rng.integers(0, 4, (2, n)).astype(np.int8))
+    lens = jnp.asarray(np.full(2, n, np.int32))
+    b = jnp.asarray(rng.integers(0, 4, n).astype(np.int8))
+    dummy = jnp.full((2, 2 * n), 5, jnp.int8)
+    ok = jnp.asarray([False, False])
+    loc = AlignEngine(sub, gap_open=3, gap_extend=1, gap_code=5,
+                      backend="jnp", local=True)
+    glob = AlignEngine(sub, gap_open=3, gap_extend=1, gap_code=5,
+                       backend="jnp", local=False)
+    al, _, nfl = loc.realign_failed(Q, lens, b, jnp.int32(n), dummy, dummy, ok)
+    ag, _, nfg = glob.realign_failed(Q, lens, b, jnp.int32(n), dummy, dummy, ok)
+    assert nfl == nfg == 2
+    np.testing.assert_array_equal(np.asarray(al), np.asarray(ag))
+
+
+def test_bucketed_matches_unbucketed():
+    """Length bucketing is a pure scheduling change: identical output."""
+    lengths = (0, 1, 5, 17, 33, 64, 120, 300)
+    seqs = ["".join(RNG.choice(list("ACGT"), L)) for L in lengths]
+    Q, lens = ab.encode_batch(seqs, ab.DNA)
+    center, lc = np.asarray(Q[-1]), int(lens[-1])
+    sub = ab.dna_matrix().astype(jnp.float32)
+    for backend in ("jnp", "banded"):
+        kw = dict(gap_open=3, gap_extend=1, gap_code=5, backend=backend,
+                  band=700)
+        rb = AlignEngine(sub, bucket=True, min_bucket=16,
+                         **kw).align_to_center(Q, lens, center, jnp.int32(lc))
+        ru = AlignEngine(sub, bucket=False,
+                         **kw).align_to_center(Q, lens, center, jnp.int32(lc))
+        np.testing.assert_array_equal(np.asarray(rb.score),
+                                      np.asarray(ru.score), err_msg=backend)
+        np.testing.assert_array_equal(np.asarray(rb.aln_len),
+                                      np.asarray(ru.aln_len), err_msg=backend)
+        for i in range(len(seqs)):
+            k = int(ru.aln_len[i])
+            np.testing.assert_array_equal(
+                np.asarray(rb.a_row[i])[:k], np.asarray(ru.a_row[i])[:k],
+                err_msg=f"{backend} row {i}")
+
+
+def test_bucket_plan_pow2_and_clamped():
+    plan = bucket_plan(np.array([0, 1, 5, 17, 33, 120, 300]), 300,
+                       min_bucket=16)
+    widths = [w for w, _ in plan]
+    assert widths == sorted(widths)
+    assert all(w <= 300 for w in widths)
+    covered = np.concatenate([ix for _, ix in plan])
+    assert sorted(covered.tolist()) == list(range(7))
+    lens = np.array([0, 1, 5, 17, 33, 120, 300])
+    for w, ix in plan:
+        assert (lens[ix] <= w).all()
+
+
+def test_resolve_backend():
+    assert resolve_backend("jnp") == "jnp"
+    assert resolve_backend("auto") in BACKENDS
+    with pytest.raises(ValueError):
+        resolve_backend("spark")
+
+
+def test_msa_through_backends():
+    """center_star_msa recovers inputs through every backend."""
+    from repro.core.msa import MSAConfig, center_star_msa, decode_msa
+    r = np.random.default_rng(3)
+    base = "".join(r.choice(list("ACGT"), 60))
+    fam = [base]
+    for _ in range(3):
+        s = list(base)
+        for _ in range(2):
+            s[r.integers(0, len(s))] = "ACGT"[r.integers(0, 4)]
+        fam.append("".join(s))
+    for backend in ("jnp", "pallas", "banded"):
+        cfg = MSAConfig(method="plain", backend=backend, band=144)
+        res = center_star_msa(fam, cfg)
+        rows = decode_msa(res.msa, cfg)
+        assert all(rw.replace("-", "") == s for s, rw in zip(fam, rows)), \
+            backend
+        assert res.n_fallback == 0, backend
+
+
+def test_msa_kmer_fallback_via_engine():
+    """Chain failures re-align through the engine (device-side merge)."""
+    from repro.core.msa import MSAConfig, center_star_msa, decode_msa
+    r = np.random.default_rng(11)
+    center = "".join(r.choice(list("ACGT"), 80))
+    diverged = "".join(r.choice(list("ACGT"), 70))   # no shared 8-mers
+    fam = [center, diverged, center[:60]]
+    cfg = MSAConfig(method="kmer", k=8, backend="jnp")
+    res = center_star_msa(fam, cfg)
+    rows = decode_msa(res.msa, cfg)
+    assert all(rw.replace("-", "") == s for s, rw in zip(fam, rows))
+    assert res.n_fallback >= 1
+
+
+def test_center_sampled_protein_warns_and_reports_mode():
+    from repro.core.msa import MSAConfig, center_star_msa
+    prots = ["MKTAYIAKQRQISFVKSHFSRQLEERLGLIEVQ",
+             "MKTAYIAKQRQISFVKSHFSRQLEERLGLIEV",
+             "MKTAYIAQQRQISFVKSHFSRQLEERLGLIEVQA"]
+    cfg = MSAConfig(method="sw", alphabet="protein", gap_open=11,
+                    center="sampled")
+    with pytest.warns(UserWarning, match="sampled"):
+        res = center_star_msa(prots, cfg)
+    assert res.center_mode == "first"
+
+
+def test_center_sampled_dna_reports_mode(dna_family):
+    from repro.core.msa import MSAConfig, center_star_msa
+    res = center_star_msa(dna_family, MSAConfig(method="kmer", k=8,
+                                                center="sampled"))
+    assert res.center_mode == "sampled"
+    assert 0 <= res.center_idx < len(dna_family)
+
+
+def test_dist_mapreduce_banded_backend():
+    """The shard_map pipeline accepts the banded backend in-graph."""
+    from repro.core.msa import MSAConfig, decode_msa
+    from repro.dist import mapreduce
+    from repro.launch.mesh import make_local_mesh
+    r = np.random.default_rng(5)
+    base = "".join(r.choice(list("ACGT"), 64))
+    fam = [base]
+    for _ in range(3):
+        s = list(base)
+        s[r.integers(0, len(s))] = "ACGT"[r.integers(0, 4)]
+        fam.append("".join(s))
+    mesh = make_local_mesh((1, 1), ("data", "model"))
+    cfg = MSAConfig(method="plain", backend="banded", band=160)
+    res = mapreduce.msa_over_mesh(fam, cfg, mesh)
+    rows = decode_msa(res.msa, cfg)
+    assert all(rw.replace("-", "") == s for s, rw in zip(fam, rows))
+
+
+def test_local_routes_away_from_banded():
+    sub = ab.dna_matrix().astype(jnp.float32)
+    eng = AlignEngine(sub, gap_open=3, gap_extend=1, backend="banded",
+                      local=True)
+    assert eng.backend == "jnp"
