@@ -18,12 +18,45 @@ from repro.core import cluster, distance, likelihood, nj, treeio
 from repro.core.msa import MSAConfig, center_star_msa
 from repro.data import SimConfig, simulate_family
 
-from .common import emit
+from .common import emit, time_host
 
 
 class _T:
     def __init__(self, children, root):
         self.children, self.root = children, root
+
+
+def _aligned_family(n, L=256, seed=0):
+    """Substitution-only family: equal-length rows == already aligned."""
+    fam = simulate_family(SimConfig(n_leaves=n, root_len=L, branch_sub=0.03,
+                                    branch_indel=0.0, seed=seed))
+    S, _ = ab.encode_batch(fam.seqs, ab.DNA)
+    return np.asarray(S)
+
+
+def backend_matrix(smoke: bool = False):
+    """repro.phylo TreeEngine backend x N timing matrix (BENCH_tree rows).
+
+    Every backend runs on the same aligned family per N; ``derived``
+    records the effective backend (cluster/auto gate to dense at small N)
+    and, for tiled runs, the peak resident distance bytes vs the
+    one-row-block-strip budget.
+    """
+    from repro.phylo import TreeEngine
+
+    sizes = [48, 160] if smoke else [96, 256, 512]
+    for n in sizes:
+        msa = _aligned_family(n)
+        for backend in ("dense", "cluster", "tiled"):
+            eng = TreeEngine(gap_code=ab.DNA.gap_code, n_chars=ab.DNA.n_chars,
+                             backend=backend, row_block=64, target_cluster=32,
+                             seed=0)
+            us, res = time_host(eng.build, msa)
+            derived = f"effective={res.backend}"
+            if res.backend == "tiled":   # strip bound is the tiled contract
+                derived += (f";peak_bytes={res.tile_stats['peak_resident_bytes']}"
+                            f";strip_bytes={res.tile_stats['row_block_bytes']}")
+            emit(f"bench/tree/{backend}_n{n}", us, derived)
 
 
 def table5_trees():
@@ -86,6 +119,7 @@ def kernel_distance_speed():
 def main():
     table5_trees()
     kernel_distance_speed()
+    backend_matrix()
 
 
 if __name__ == "__main__":

@@ -11,10 +11,12 @@ Prints ``name,us_per_call,derived`` CSV rows:
   scaling/*   — O(n) sequence-count scaling
 Run the multi-pod dry-run separately: ``python -m repro.launch.dryrun --all``.
 
-``--smoke`` runs only the small backend matrix (the CI smoke step);
-``--json PATH`` additionally writes every emitted row as JSON — CI
-uploads ``BENCH_msa.json`` as an artifact so the bench trajectory is
-tracked per commit.
+``--smoke`` runs the small backend matrices (the CI smoke step: the
+repro.align backend x method matrix plus the repro.phylo tree backend x N
+matrix); ``--json PATH`` additionally writes every emitted row as JSON and
+``--json-tree PATH`` writes just the tree rows — CI uploads
+``BENCH_msa.json`` and ``BENCH_tree.json`` as artifacts so both bench
+trajectories are tracked per commit.
 """
 from __future__ import annotations
 
@@ -25,26 +27,37 @@ import json
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="small subset: backend x method matrix only")
+                    help="small subset: the backend matrices only")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write emitted rows as JSON to PATH")
+    ap.add_argument("--json-tree", default=None, metavar="PATH",
+                    help="also write the tree-stage rows as JSON to PATH")
     args = ap.parse_args()
 
     from . import common
     print("name,us_per_call,derived")
     if args.smoke:
-        from . import bench_msa
+        from . import bench_msa, bench_tree
         bench_msa.backend_matrix(smoke=True)
+        n_msa = len(common.ROWS)
+        bench_tree.backend_matrix(smoke=True)
+        tree_rows = common.ROWS[n_msa:]
     else:
         from . import bench_msa, bench_scaling, bench_tree
         bench_msa.main()
+        n_msa = len(common.ROWS)
         bench_tree.main()
+        tree_rows = common.ROWS[n_msa:]
         bench_scaling.main()
 
     if args.json:
         with open(args.json, "w") as f:
             json.dump(common.ROWS, f, indent=1)
         print(f"# wrote {len(common.ROWS)} rows to {args.json}")
+    if args.json_tree:
+        with open(args.json_tree, "w") as f:
+            json.dump(tree_rows, f, indent=1)
+        print(f"# wrote {len(tree_rows)} tree rows to {args.json_tree}")
 
 
 if __name__ == "__main__":

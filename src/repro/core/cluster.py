@@ -43,8 +43,12 @@ class ClusterPhylogeny(NamedTuple):
     n_clusters: int
 
 
-def _farthest_point_medoids(Ds: np.ndarray, k: int) -> np.ndarray:
-    """Greedy k-center over a sampled distance matrix (host, O(k * m))."""
+def farthest_point_medoids(Ds: np.ndarray, k: int) -> np.ndarray:
+    """Greedy k-center over a sampled distance matrix (host, O(k * m)).
+
+    ``repro.phylo.tiles.greedy_k_center`` is the streamed equivalent (same
+    picks, no (m, m) matrix) used by the tiled pipeline.
+    """
     m = Ds.shape[0]
     first = int(np.argmax(Ds.sum(axis=1)))
     chosen = [first]
@@ -56,8 +60,12 @@ def _farthest_point_medoids(Ds: np.ndarray, k: int) -> np.ndarray:
     return np.asarray(chosen)
 
 
-def _rebalance(assign: np.ndarray, xdist: np.ndarray, cap: int) -> np.ndarray:
-    """Spill overflow members to the next-nearest cluster with room."""
+def rebalance(assign: np.ndarray, xdist: np.ndarray, cap: int) -> np.ndarray:
+    """Spill overflow members to the next-nearest cluster with room.
+
+    Shared host logic: the dense path below and the tiled pipeline
+    (``repro.phylo.pipeline``) both run their assignments through it.
+    """
     assign = assign.copy()
     k = xdist.shape[1]
     order = np.argsort(xdist[np.arange(len(assign)), assign])[::-1]  # worst first
@@ -98,7 +106,7 @@ def cluster_phylogeny(msa, *, gap_code: int, n_chars: int,
                                          gap_code=gap_code, n_chars=n_chars,
                                          correct=cfg.correct))
     k = max(2, int(np.ceil(N / cfg.target_cluster)))
-    med_local = _farthest_point_medoids(Ds, k)
+    med_local = farthest_point_medoids(Ds, k)
     medoids = sample[med_local]
     k = len(medoids)
 
@@ -110,7 +118,7 @@ def cluster_phylogeny(msa, *, gap_code: int, n_chars: int,
 
     # (4): rebalance (paper: split/merge until balanced; we cap + spill)
     cap = max(3, int(np.ceil(cfg.balance_factor * N / k)))
-    assign = _rebalance(assign, xdist, cap)
+    assign = rebalance(assign, xdist, cap)
 
     # (5): per-cluster NJ, vmapped over padded distance matrices
     members = [np.flatnonzero(assign == c) for c in range(k)]

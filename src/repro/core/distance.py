@@ -65,19 +65,30 @@ def jc69_distance(p):
     return -0.75 * jnp.log(x)
 
 
+def counts_to_distance(match, valid, *, correct: bool = True):
+    """JC69 (or raw p) distances from (match, valid) count blocks.
+
+    The shared tail of the dense, cross, and tiled paths — counts are exact
+    integers in f32, so any block decomposition that feeds this produces
+    bitwise-identical distances (the ``repro.phylo.tiles`` invariant).
+    """
+    p = 1.0 - match / jnp.maximum(valid, 1.0)
+    p = jnp.where(valid > 0, p, 0.75)   # saturated when no overlap
+    return jc69_distance(p) if correct else p
+
+
 def distance_matrix(msa, *, gap_code: int, n_chars: int, correct: bool = True,
                     chunk: int = 512):
-    p = p_distance(msa, gap_code=gap_code, n_chars=n_chars, chunk=chunk)
-    d = jc69_distance(p) if correct else p
+    match, valid = match_valid_counts(msa, gap_code=gap_code, n_chars=n_chars,
+                                      chunk=chunk)
+    d = counts_to_distance(match, valid, correct=correct)
     d = (d + d.T) / 2.0
     return d * (1.0 - jnp.eye(d.shape[0]))
 
 
 def cross_distance(msa, other, *, gap_code: int, n_chars: int,
                    correct: bool = True, chunk: int = 512):
-    """(N, M) distances between two row sets (medoid assignment)."""
+    """(N, M) distances between two row sets (medoid assignment, tiles)."""
     match, valid = match_valid_counts(msa, other, gap_code=gap_code,
                                       n_chars=n_chars, chunk=chunk)
-    p = 1.0 - match / jnp.maximum(valid, 1.0)
-    p = jnp.where(valid > 0, p, 0.75)
-    return jc69_distance(p) if correct else p
+    return counts_to_distance(match, valid, correct=correct)

@@ -19,6 +19,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 INF = jnp.float32(1e30)
 
@@ -83,3 +84,12 @@ def neighbor_joining(D, size) -> Tree:
 def nj_batch(Ds, sizes) -> Tree:
     """vmapped NJ over padded per-cluster distance matrices (HPTree stage)."""
     return jax.vmap(neighbor_joining)(Ds, sizes)
+
+
+def host_tree(tree: Tree):
+    """Device ``Tree`` -> ``(children, blen, root)`` numpy triple.
+
+    The hand-off point between the device-side builders and the host-side
+    consumers (treeio stitch/newick, the launchers, ``repro.phylo``).
+    """
+    return np.asarray(tree.children), np.asarray(tree.blen), int(tree.root)

@@ -10,18 +10,27 @@ import numpy as np
 
 def to_newick(children: np.ndarray, blen: np.ndarray, root: int,
               names: Optional[Sequence[str]] = None) -> str:
+    """Newick string via iterative postorder (matching ``leaf_sets``) —
+    NJ can emit caterpillar-deep trees that blow Python's recursion limit
+    around ~1000 leaves."""
     children = np.asarray(children)
     blen = np.asarray(blen)
-
-    def rec(node: int) -> str:
+    frag: dict[int, str] = {}
+    stack = [(int(root), False)]
+    while stack:
+        node, seen = stack.pop()
         c = children[node]
         if c[0] < 0:
-            return names[node] if names else f"t{node}"
-        left = f"{rec(int(c[0]))}:{float(blen[node, 0]):.6f}"
-        right = f"{rec(int(c[1]))}:{float(blen[node, 1]):.6f}"
-        return f"({left},{right})"
-
-    return rec(int(root)) + ";"
+            frag[node] = names[node] if names else f"t{node}"
+        elif not seen:
+            stack.append((node, True))
+            stack.append((int(c[0]), False))
+            stack.append((int(c[1]), False))
+        else:
+            left = f"{frag.pop(int(c[0]))}:{float(blen[node, 0]):.6f}"
+            right = f"{frag.pop(int(c[1]))}:{float(blen[node, 1]):.6f}"
+            frag[node] = f"({left},{right})"
+    return frag[int(root)] + ";"
 
 
 def leaf_sets(children: np.ndarray, root: int, n_leaves: int):
@@ -94,42 +103,42 @@ def stitch_cluster_trees(skeleton_children, skeleton_blen, skeleton_root,
         next_id += 1
         return next_id - 1
 
+    def copy_tree(ch, bl, root, leaf_id):
+        """Re-emit the subtree at ``root`` into the global arrays, mapping
+        leaf ``n`` through ``leaf_id``. Iterative postorder — cluster and
+        skeleton NJ trees can be caterpillar-deep (same hazard as
+        ``to_newick``)."""
+        mapped: dict[int, int] = {}
+        stack = [(int(root), False)]
+        while stack:
+            node, seen = stack.pop()
+            c = ch[node]
+            if c[0] < 0:
+                mapped[node] = leaf_id(node)
+            elif not seen:
+                stack.append((node, True))
+                stack.append((int(c[1]), False))   # c0 pops (and allocs) first,
+                stack.append((int(c[0]), False))   # matching the old recursion
+            else:
+                nid = alloc()
+                children_out[nid - n_global] = [mapped[int(c[0])],
+                                                mapped[int(c[1])]]
+                blen_out[nid - n_global] = [float(bl[node, 0]),
+                                            float(bl[node, 1])]
+                mapped[node] = nid
+        return mapped[int(root)]
+
     cluster_root_global = []
     for (ch, bl, root, size), members in zip(cluster_trees, cluster_members):
         ch, bl = np.asarray(ch), np.asarray(bl)
-        mapping: dict[int, int] = {}
-
-        def rec(node: int) -> int:
-            if ch[node][0] < 0:
-                return int(members[node])
-            if node in mapping:
-                return mapping[node]
-            l = rec(int(ch[node][0]))
-            r = rec(int(ch[node][1]))
-            nid = alloc()
-            children_out[nid - n_global] = [l, r]
-            blen_out[nid - n_global] = [float(bl[node, 0]), float(bl[node, 1])]
-            mapping[node] = nid
-            return nid
-
         if int(size) == 1:
             cluster_root_global.append(int(members[0]))
         else:
-            cluster_root_global.append(rec(int(root)))
+            cluster_root_global.append(
+                copy_tree(ch, bl, root, lambda n: int(members[n])))
 
-    def rec_sk(node: int) -> int:
-        c = skeleton_children[node]
-        if c[0] < 0:
-            return cluster_root_global[node]
-        l = rec_sk(int(c[0]))
-        r = rec_sk(int(c[1]))
-        nid = alloc()
-        children_out[nid - n_global] = [l, r]
-        blen_out[nid - n_global] = [float(skeleton_blen[node, 0]),
-                                    float(skeleton_blen[node, 1])]
-        return nid
-
-    root = rec_sk(int(skeleton_root))
+    root = copy_tree(skeleton_children, skeleton_blen, skeleton_root,
+                     lambda n: cluster_root_global[n])
     children = np.full((next_id, 2), -1, np.int32)
     blen = np.zeros((next_id, 2), np.float32)
     if children_out:

@@ -156,6 +156,51 @@ def distributed_center_star(mesh: Mesh, *, method: str, sub, gap_code: int,
     return jax.jit(fn)
 
 
+def distance_strip_over_mesh(mesh: Mesh, *, gap_code: int, n_chars: int,
+                             correct: bool = True, data_axis: str = "data"):
+    """Tree-stage hook: jitted ``fn(rows_blk, S) -> (rb, N)`` distance strip.
+
+    The phylogeny analogue of the MSA map stage: ``S`` is the full aligned
+    row set sharded over ``data_axis`` (place once with
+    ``sharding.shard_rows``; pad with ``pad_rows`` first), ``rows_blk`` a
+    replicated (row_block, L) block. Each device computes
+    ``cross_distance(rows_blk, its shard)`` — a row-block x column-block
+    tile — and the strip comes back concatenated over the column dim
+    (out spec ``P(None, data_axis)``). ``repro.phylo.tiles.TileContext``
+    streams these strips so no host holds more than one.
+    """
+    from ..core import distance as dist_mod
+
+    def _strip(blk, S):
+        return dist_mod.cross_distance(blk, S, gap_code=gap_code,
+                                       n_chars=n_chars, correct=correct)
+
+    fn = sh.shard_map(_strip, mesh, in_specs=(P(), P(data_axis, None)),
+                      out_specs=P(None, data_axis), check_vma=False)
+    return jax.jit(fn)
+
+
+def nearest_anchor_over_mesh(mesh: Mesh, *, gap_code: int, n_chars: int,
+                             correct: bool = True, data_axis: str = "data"):
+    """Tree-stage hook: jitted ``fn(S, anchors) -> (N, k)`` distances.
+
+    The assignment stage of the tiled HPTree pipeline: ``S`` is the full
+    row set sharded over ``data_axis``, ``anchors`` the k medoid rows
+    replicated — each device computes its rows' distances to every medoid
+    (the transpose of ``distance_strip_over_mesh``'s tiling, chosen
+    because k << N so sharding the long axis is the one that balances).
+    """
+    from ..core import distance as dist_mod
+
+    def _nearest(S, A):
+        return dist_mod.cross_distance(S, A, gap_code=gap_code,
+                                       n_chars=n_chars, correct=correct)
+
+    fn = sh.shard_map(_nearest, mesh, in_specs=(P(data_axis, None), P()),
+                      out_specs=P(data_axis, None), check_vma=False)
+    return jax.jit(fn)
+
+
 def center_row(center, lc, G, *, gap_code: int, out_len: int):
     """The broadcast center's own row in the merged frame (host-side wrap)."""
     return centerstar.center_msa_row(center, lc, G, gap_code=gap_code,

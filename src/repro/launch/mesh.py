@@ -23,6 +23,22 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.sharding.Mesh(dev, axes)
 
 
+def mesh_from_arg(arg=None):
+    """CLI ``--mesh DxM`` string -> local (data, model) mesh.
+
+    ``None`` (flag omitted) uses all visible devices x 1. Shared by the
+    msa_run / tree_run launchers.
+    """
+    if arg:
+        try:
+            d, m = (int(x) for x in arg.split("x"))
+        except ValueError:
+            raise ValueError(f"--mesh expects DxM (e.g. 4x1), got {arg!r}")
+    else:
+        d, m = len(jax.devices()), 1
+    return make_local_mesh((d, m), ("data", "model"))
+
+
 def make_local_mesh(shape=(1, 1), axes=("data", "model")):
     """Small mesh over however many real devices exist (tests, examples)."""
     import numpy as np

@@ -13,6 +13,10 @@ over the data axis — identical math, Spark-style execution); the default
 path is the single-host driver in ``repro.core.msa``. ``--backend`` picks
 the map(1) DP primitive from the ``repro.align`` registry (``auto`` =
 Pallas kernel on TPU, jnp scan elsewhere; ``banded`` = O(n·band) memory).
+``--tree`` picks the ``repro.phylo.TreeEngine`` backend for the phylogeny
+stage (``nj`` = dense; ``tiled`` composes with ``--dist`` by shard-mapping
+the distance strips over the same mesh); ``repro.launch.tree_run``
+rebuilds a tree from an already-aligned FASTA without redoing the MSA.
 """
 from __future__ import annotations
 
@@ -21,12 +25,10 @@ import json
 import time
 from pathlib import Path
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fasta", required=True)
     ap.add_argument("--out", default="msa_out")
@@ -34,7 +36,15 @@ def main():
                     choices=["kmer", "plain", "sw"])
     ap.add_argument("--alphabet", default="dna",
                     choices=["dna", "rna", "protein"])
-    ap.add_argument("--tree", default="nj", choices=["nj", "cluster", "none"])
+    ap.add_argument("--tree", default="nj",
+                    choices=["nj", "cluster", "tiled", "auto", "none"],
+                    help="tree backend (repro.phylo registry; nj = dense)")
+    ap.add_argument("--cluster-threshold", type=int, default=64,
+                    help="N at or below which cluster/auto tree backends "
+                         "fall back to dense NJ")
+    ap.add_argument("--tree-ll", action="store_true",
+                    help="record the tree's JC69 log-likelihood in the "
+                         "report (DNA/RNA only)")
     ap.add_argument("--k", type=int, default=11)
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "jnp", "pallas", "banded"],
@@ -47,11 +57,10 @@ def main():
     ap.add_argument("--mesh", default=None,
                     help="data x model for --dist, e.g. 4x1; default: all "
                          "visible devices x 1")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     from ..core import alphabet as ab
-    from ..core import cluster as cl
-    from ..core import distance, likelihood, nj, sp_score, treeio
+    from ..core import likelihood, sp_score, treeio
     from ..core.msa import MSAConfig, center_star_msa, decode_msa
     from ..data import read_fasta, write_fasta
 
@@ -60,15 +69,13 @@ def main():
     cfg = MSAConfig(method=args.method, alphabet=args.alphabet, k=args.k,
                     gap_open=11 if args.alphabet == "protein" else 3,
                     backend=args.backend, band=args.band)
+    mesh = None
+    if args.dist:
+        from .mesh import mesh_from_arg
+        mesh = mesh_from_arg(args.mesh)
     t0 = time.time()
     if args.dist:
         from ..dist import mapreduce
-        from .mesh import make_local_mesh
-        if args.mesh:
-            d, m = (int(x) for x in args.mesh.split("x"))
-        else:
-            d, m = len(jax.devices()), 1
-        mesh = make_local_mesh((d, m), ("data", "model"))
         res = mapreduce.msa_over_mesh(seqs, cfg, mesh)
     else:
         res = center_star_msa(seqs, cfg)
@@ -91,24 +98,25 @@ def main():
               "msa_seconds": t_msa}
 
     if args.tree != "none":
+        from ..phylo import TreeEngine
         t0 = time.time()
-        if args.tree == "cluster" and len(seqs) > 64:
-            cp = cl.cluster_phylogeny(res.msa, gap_code=alpha.gap_code,
-                                      n_chars=alpha.n_chars)
-            children, blen, root = cp.children, cp.blen, cp.root
-        else:
-            D = distance.distance_matrix(msa, gap_code=alpha.gap_code,
-                                         n_chars=alpha.n_chars,
-                                         correct=args.alphabet != "protein")
-            tr = nj.neighbor_joining(D, len(seqs))
-            children, blen, root = (np.asarray(tr.children),
-                                    np.asarray(tr.blen), int(tr.root))
+        engine = TreeEngine(gap_code=alpha.gap_code, n_chars=alpha.n_chars,
+                            correct=args.alphabet != "protein",
+                            backend="dense" if args.tree == "nj" else args.tree,
+                            cluster_threshold=args.cluster_threshold,
+                            mesh=mesh)
+        tree_res = engine.build(res.msa)
         report["tree_seconds"] = time.time() - t0
-        nwk = treeio.to_newick(children, blen, root, names)
+        report["tree_backend"] = tree_res.backend
+        if tree_res.tile_stats is not None:
+            report["tile_stats"] = tree_res.tile_stats
+        nwk = treeio.to_newick(tree_res.children, tree_res.blen,
+                               tree_res.root, names)
         (out / "tree.nwk").write_text(nwk + "\n")
-        if args.alphabet != "protein":
+        if args.tree_ll and args.alphabet != "protein":
             report["log_likelihood"] = float(likelihood.log_likelihood(
-                msa, jnp.asarray(children), jnp.asarray(blen), root,
+                msa, jnp.asarray(tree_res.children),
+                jnp.asarray(tree_res.blen), tree_res.root,
                 gap_code=alpha.gap_code))
 
     (out / "report.json").write_text(json.dumps(report, indent=1))

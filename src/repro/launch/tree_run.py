@@ -1,0 +1,97 @@
+"""Tree reconstruction from an already-aligned FASTA — no MSA redo.
+
+The second half of the paper's title as its own launcher: point it at the
+``aligned.fasta`` an earlier ``msa_run`` produced (or any aligned FASTA)
+and it dispatches through the ``repro.phylo.TreeEngine``.
+
+  PYTHONPATH=src python -m repro.launch.tree_run --fasta aligned.fasta \
+      --out tree_out/ --backend tiled [--row-block 128] [--dist --mesh 4x1]
+
+Outputs ``tree.nwk`` and ``report.json`` (effective backend, timings, and
+for tiled backends the tile accountant's memory stats — peak resident
+distance storage vs the one-row-block-strip budget).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fasta", required=True,
+                    help="aligned FASTA (equal-width rows, '-' for gaps)")
+    ap.add_argument("--out", default="tree_out")
+    ap.add_argument("--alphabet", default="dna",
+                    choices=["dna", "rna", "protein"])
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "dense", "tiled", "cluster"],
+                    help="tree backend (repro.phylo registry)")
+    ap.add_argument("--cluster-threshold", type=int, default=64,
+                    help="N at or below which cluster/auto fall back to "
+                         "dense NJ")
+    ap.add_argument("--row-block", type=int, default=128,
+                    help="tile row-block: the tiled backend's per-host "
+                         "distance budget is row_block * N * 4 bytes")
+    ap.add_argument("--target-cluster", type=int, default=64,
+                    help="desired leaves per HPTree cluster")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tree-ll", action="store_true",
+                    help="also score the tree by JC69 log-likelihood "
+                         "(DNA/RNA only)")
+    ap.add_argument("--dist", action="store_true",
+                    help="shard-map the distance strips over the mesh")
+    ap.add_argument("--mesh", default=None,
+                    help="data x model for --dist, e.g. 4x1; default: all "
+                         "visible devices x 1")
+    args = ap.parse_args(argv)
+
+    from ..core import alphabet as ab
+    from ..core import likelihood
+    from ..data import read_fasta
+    from ..phylo import TreeEngine
+
+    names, seqs = read_fasta(args.fasta)
+    widths = {len(s) for s in seqs}
+    if len(widths) != 1:
+        raise ValueError(
+            f"{args.fasta} is not aligned (row widths {sorted(widths)[:5]}"
+            f"...); run repro.launch.msa_run first")
+    alpha = {"dna": ab.DNA, "rna": ab.RNA, "protein": ab.PROTEIN}[args.alphabet]
+    msa = np.stack([alpha.encode_aligned(s) for s in seqs])
+
+    mesh = None
+    if args.dist:
+        from .mesh import mesh_from_arg
+        mesh = mesh_from_arg(args.mesh)
+
+    engine = TreeEngine(gap_code=alpha.gap_code, n_chars=alpha.n_chars,
+                        correct=args.alphabet != "protein",
+                        backend=args.backend,
+                        cluster_threshold=args.cluster_threshold,
+                        row_block=args.row_block,
+                        target_cluster=args.target_cluster,
+                        seed=args.seed, mesh=mesh)
+    result = engine.build(msa)
+
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "tree.nwk").write_text(result.newick(names) + "\n")
+    report = {"n_sequences": result.n_leaves, "width": msa.shape[1],
+              "backend": result.backend, "requested_backend": args.backend,
+              "tree_seconds": result.timings["total_seconds"],
+              "tile_stats": result.tile_stats}
+    if args.tree_ll and args.alphabet != "protein":
+        import jax.numpy as jnp
+        report["log_likelihood"] = float(likelihood.log_likelihood(
+            jnp.asarray(msa), jnp.asarray(result.children),
+            jnp.asarray(result.blen), result.root, gap_code=alpha.gap_code))
+    (out / "report.json").write_text(json.dumps(report, indent=1))
+    print(json.dumps(report, indent=1))
+
+
+if __name__ == "__main__":
+    main()

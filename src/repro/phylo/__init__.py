@@ -1,0 +1,12 @@
+"""repro.phylo — the distributed, tiled phylogeny subsystem.
+
+The second half of the paper's title at scale: ``tiles`` (the shard-mapped
+tiled distance-matrix engine with streaming block-reductions), ``pipeline``
+(the HPTree cluster-merge pipeline that never materializes an (N, N) — or
+even (0.1 N, 0.1 N) — matrix), and ``engine`` (the backend-dispatching
+``TreeEngine``: dense | tiled | cluster, ``auto`` resolved by N and mesh).
+"""
+from .engine import (AUTO_TILED_N, PhyloResult, TREE_BACKENDS,  # noqa: F401
+                     TreeEngine, resolve_tree_backend)
+from .pipeline import tiled_phylogeny  # noqa: F401
+from .tiles import TileAccountant, TileContext  # noqa: F401

@@ -1,0 +1,164 @@
+"""TreeEngine: the backend-dispatching phylogeny engine (repro.align's shape).
+
+One entry point for every tree reconstruction path in the repo — the
+single-host CLI (``launch/msa_run.py --tree``), the aligned-FASTA launcher
+(``launch/tree_run.py``), and the benchmarks all dispatch through it.
+
+Backends (``TREE_BACKENDS``):
+
+  dense     (N, N) matrix + monolithic NJ — exact, O(N^2) host memory
+  tiled     streamed HPTree pipeline over distance tiles
+            (``repro.phylo.pipeline``) — resident distance storage per
+            host <= one (row_block, N) strip; resolves to ``tiled-exact``
+            (tile-assembled matrix + monolithic NJ, still within budget)
+            when N <= row_block
+  cluster   the dense HPTree cluster-merge (``core.cluster``) — scalable
+            compute, but still materializes the (0.1 N)^2 sample matrix
+  auto      dense below ``cluster_threshold``; tiled on a multi-device
+            mesh or ultra-large N; cluster otherwise
+
+``build`` returns a uniform ``PhyloResult`` (tree arrays, the effective
+backend that ran, timings, and the tile accountant's memory stats).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import cluster as cluster_mod
+from ..core import distance as dist_mod
+from ..core import nj as nj_mod
+from ..core import treeio
+from . import pipeline, tiles
+
+TREE_BACKENDS = ("auto", "dense", "tiled", "cluster")
+
+# above this N, `auto` prefers the tiled pipeline even on one device: the
+# dense cluster path's (0.1 N)^2 sample matrix starts to dominate memory
+AUTO_TILED_N = 4096
+
+
+class PhyloResult(NamedTuple):
+    children: np.ndarray     # (2N-1, 2) int32, -1 children marks a leaf
+    blen: np.ndarray         # (2N-1, 2) float32 branch lengths
+    root: int
+    n_leaves: int
+    backend: str             # effective backend that ran (see resolve)
+    requested: str           # what the caller asked for
+    timings: Dict[str, float]
+    tile_stats: Optional[dict]   # accountant stats for tiled backends
+
+    def newick(self, names=None) -> str:
+        return treeio.to_newick(self.children, self.blen, self.root, names)
+
+
+def resolve_tree_backend(backend: str, *, n: int, mesh=None,
+                         cluster_threshold: int = 64,
+                         row_block: int = 128) -> str:
+    """Map a requested backend + problem geometry to the one that runs.
+
+    ``cluster`` drops to ``dense`` at or below ``cluster_threshold`` (the
+    old hardcoded ``len(seqs) > 64`` launcher gate, now a knob); ``tiled``
+    becomes ``tiled-exact`` when the whole matrix fits one strip.
+    """
+    if backend not in TREE_BACKENDS:
+        raise ValueError(f"unknown tree backend {backend!r}; "
+                         f"expected one of {TREE_BACKENDS}")
+    if backend == "auto":
+        if n <= cluster_threshold:
+            return "dense"
+        mesh_devices = int(np.asarray(mesh.devices).size) if mesh is not None \
+            else 1
+        if mesh_devices > 1 or n > AUTO_TILED_N:
+            return "tiled" if n > row_block else "tiled-exact"
+        return "cluster"
+    if backend == "cluster" and n <= cluster_threshold:
+        return "dense"
+    if backend == "tiled" and n <= row_block:
+        return "tiled-exact"
+    return backend
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeEngine:
+    """One configured tree engine; construction is cheap (jit caches are
+    module-level in the primitives it dispatches to)."""
+
+    gap_code: int
+    n_chars: int
+    correct: bool = True             # JC69 correction (off for protein)
+    backend: str = "auto"
+    cluster_threshold: int = 64
+    row_block: int = 128
+    col_block: Optional[int] = None
+    target_cluster: int = 64
+    sample_frac: float = 0.10
+    seed: int = 0
+    mesh: Optional[object] = None
+    use_kernel: Optional[bool] = None
+
+    def cluster_cfg(self) -> cluster_mod.ClusterConfig:
+        return cluster_mod.ClusterConfig(sample_frac=self.sample_frac,
+                                         target_cluster=self.target_cluster,
+                                         seed=self.seed, correct=self.correct)
+
+    def tile_ctx(self, accountant: Optional[tiles.TileAccountant] = None
+                 ) -> tiles.TileContext:
+        return tiles.TileContext(gap_code=self.gap_code, n_chars=self.n_chars,
+                                 correct=self.correct,
+                                 row_block=self.row_block,
+                                 col_block=self.col_block,
+                                 use_kernel=self.use_kernel, mesh=self.mesh,
+                                 accountant=accountant)
+
+    def resolve(self, n: int) -> str:
+        return resolve_tree_backend(self.backend, n=n, mesh=self.mesh,
+                                    cluster_threshold=self.cluster_threshold,
+                                    row_block=self.row_block)
+
+    def build(self, msa, *,
+              accountant: Optional[tiles.TileAccountant] = None
+              ) -> PhyloResult:
+        """Reconstruct a tree from aligned (N, L) int8 rows."""
+        msa_np = np.asarray(msa)
+        n = msa_np.shape[0]
+        if n < 2:
+            raise ValueError(f"need >= 2 sequences for a tree, got {n}")
+        eff = self.resolve(n)
+        acct = accountant or tiles.TileAccountant()
+        t0 = time.perf_counter()
+
+        if eff == "dense":
+            D = dist_mod.distance_matrix(jnp.asarray(msa_np),
+                                         gap_code=self.gap_code,
+                                         n_chars=self.n_chars,
+                                         correct=self.correct)
+            children, blen, root = nj_mod.host_tree(
+                nj_mod.neighbor_joining(D, n))
+        elif eff == "tiled-exact":
+            ctx = self.tile_ctx(acct)
+            D = ctx.full(msa_np)
+            children, blen, root = nj_mod.host_tree(
+                nj_mod.neighbor_joining(jnp.asarray(D), n))
+            ctx.release(D)
+        elif eff == "tiled":
+            cp = pipeline.tiled_phylogeny(msa_np, tiles=self.tile_ctx(acct),
+                                          cfg=self.cluster_cfg())
+            children, blen, root = cp.children, cp.blen, cp.root
+        else:   # cluster
+            cp = cluster_mod.cluster_phylogeny(msa_np, gap_code=self.gap_code,
+                                               n_chars=self.n_chars,
+                                               cfg=self.cluster_cfg())
+            children, blen, root = cp.children, cp.blen, cp.root
+
+        timings = {"total_seconds": time.perf_counter() - t0}
+        tile_stats = None
+        if eff.startswith("tiled"):
+            tile_stats = dict(acct.stats(),
+                              row_block_bytes=self.row_block * n * 4)
+        return PhyloResult(np.asarray(children), np.asarray(blen), int(root),
+                           n, eff, self.backend, timings, tile_stats)

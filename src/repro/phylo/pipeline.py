@@ -1,0 +1,107 @@
+"""Distributed HPTree pipeline over distance tiles (paper Fig. 4 at scale).
+
+Mirrors ``core.cluster.cluster_phylogeny`` stage for stage but never
+materializes the (N, N) matrix — nor even the (m, m) sketch-sample matrix
+that is the dense path's own cliff at ultra-large N:
+
+  (1) sketch sample       host rng, same draws as the dense path
+  (2) medoid selection    streamed greedy k-center (``TileContext``)
+  (3) assignment          row-block strips against the k medoid rows
+  (4) rebalance           host overflow spill (``core.cluster.rebalance``)
+  (5) per-cluster NJ      ``nj_batch`` vmap over cluster chunks sized so
+                          the padded matrices fit one tile row-block strip
+  (6) skeleton + stitch   k x k NJ + ``treeio.stitch_cluster_trees``
+
+Resident distance storage per host stays <= one (row_block, N) strip
+throughout, tracked by the ``TileAccountant``. The only way to exceed it
+is a single cluster whose padded matrix is more than half a strip
+(2 * cap^2 > row_block * N, with cap ~ 1.5 * target_cluster) — impossible
+in the ultra-large-N regime this backend targets (N >= ~1300 at the
+defaults) since stage (5) always needs one cluster matrix plus its batch
+slot resident. Given the same ``ClusterConfig`` the result is
+bit-identical to the dense cluster path —
+distance counts are exact integers in f32, so every tile equals the
+corresponding dense sub-block — pinned by ``tests/test_phylo_engine.py``.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..core import cluster as cluster_mod
+from ..core import nj as nj_mod
+from ..core import treeio
+from .tiles import TileContext
+
+
+def tiled_phylogeny(msa, *, tiles: TileContext,
+                    cfg: cluster_mod.ClusterConfig = cluster_mod.ClusterConfig()
+                    ) -> cluster_mod.ClusterPhylogeny:
+    """HPTree cluster-merge phylogeny with tiled, streamed distance stages.
+
+    ``msa``: (N, L) int8 aligned rows; ``tiles`` carries alphabet, tile
+    geometry, mesh placement, and the accountant. Returns the same
+    ``ClusterPhylogeny`` as ``core.cluster.cluster_phylogeny``.
+    """
+    msa = np.asarray(msa)
+    N = msa.shape[0]
+    acct = tiles.accountant
+    strip_bytes = tiles.row_block * N * 4
+    rng = np.random.default_rng(cfg.seed)
+
+    # (1)-(2): sketch sample + streamed medoid selection
+    m = max(cfg.min_sample, int(N * cfg.sample_frac))
+    sample = np.sort(rng.choice(N, size=min(m, N), replace=False))
+    k = max(2, int(np.ceil(N / cfg.target_cluster)))
+    med_local = tiles.greedy_k_center(msa[sample], k)
+    medoids = sample[med_local]
+    k = len(medoids)
+
+    # (3): assignment, one row-block strip at a time
+    xdist = tiles.nearest(msa, msa[medoids])
+    assign = np.argmin(xdist, axis=1)
+
+    # (4): cap + spill (shared host logic with the dense path)
+    cap = max(3, int(np.ceil(cfg.balance_factor * N / k)))
+    assign = cluster_mod.rebalance(assign, xdist, cap)
+    tiles.release(xdist)            # assignment fixed; free before stage 5
+
+    # (5): per-cluster NJ, vmapped in chunks that fit one strip
+    members = [np.flatnonzero(assign == c) for c in range(k)]
+    cap_sz = max(max(len(mm) for mm in members), 3)
+    per = cap_sz * cap_sz * 4
+    # one chunk of padded matrices + one transient sub-matrix <= one strip
+    chunk = max(1, strip_bytes // per - 1)
+    cluster_trees = []
+    for c0 in range(0, k, chunk):
+        cs = range(c0, min(c0 + chunk, k))
+        Dpad = tiles.track(np.zeros((len(cs), cap_sz, cap_sz), np.float32))
+        sizes = np.zeros((len(cs),), np.int32)
+        for gi, c in enumerate(cs):
+            mm = members[c]
+            if len(mm) == 0:
+                sizes[gi] = 1
+                continue
+            nbytes = acct.alloc(cap_sz * cap_sz * 4)
+            sub = tiles.square(msa[mm], pad_to=cap_sz)
+            Dpad[gi, : len(mm), : len(mm)] = sub
+            acct.free(nbytes)
+            sizes[gi] = len(mm)
+        trees = nj_mod.nj_batch(jnp.asarray(Dpad), jnp.asarray(sizes))
+        for gi in range(len(sizes)):
+            cluster_trees.append((np.asarray(trees.children[gi]),
+                                  np.asarray(trees.blen[gi]),
+                                  int(trees.root[gi]), int(sizes[gi])))
+        tiles.release(Dpad)
+
+    # (6): skeleton over medoids + stitch
+    Dm = tiles.track(tiles.square(msa[medoids]))
+    skel = nj_mod.neighbor_joining(jnp.asarray(Dm), k)
+    tiles.release(Dm)
+    members_nonempty = [mm if len(mm) else np.asarray([medoids[c]])
+                        for c, mm in enumerate(members)]
+    children, blen, root = treeio.stitch_cluster_trees(
+        np.asarray(skel.children), np.asarray(skel.blen), int(skel.root),
+        cluster_trees, members_nonempty)
+    return cluster_mod.ClusterPhylogeny(children, blen, root,
+                                        assign.astype(np.int32), medoids, k)

@@ -82,6 +82,41 @@ def test_cluster_phylogeny_runs_and_covers_all_leaves():
     assert nwk.count("seq") == 48
 
 
+def test_newick_deep_caterpillar_no_recursion_error():
+    """to_newick on a 5000-leaf caterpillar — the recursive writer died at
+    ~1000 leaves (Python recursion limit); the iterative one must not."""
+    n = 5000
+    children = np.full((2 * n - 1, 2), -1, np.int32)
+    blen = np.full((2 * n - 1, 2), 0.5, np.float32)
+    children[n] = (0, 1)
+    for i in range(1, n - 1):
+        children[n + i] = (n + i - 1, i + 1)
+    root = 2 * n - 2
+    nwk = treeio.to_newick(children, blen, root)
+    assert nwk.count(",") == n - 1
+    assert nwk.count("(") == nwk.count(")") == n - 1
+    assert nwk.endswith(";")
+
+
+def test_stitch_deep_caterpillar_no_recursion_error():
+    """stitch_cluster_trees on a 3000-leaf caterpillar cluster subtree —
+    the recursive copier died at ~1000 leaves like to_newick did."""
+    n0 = 3000
+    ch = np.full((2 * n0 - 1, 2), -1, np.int32)
+    bl = np.full((2 * n0 - 1, 2), 0.5, np.float32)
+    ch[n0] = (0, 1)
+    for i in range(1, n0 - 1):
+        ch[n0 + i] = (n0 + i - 1, i + 1)
+    skel_ch = np.array([[-1, -1], [-1, -1], [0, 1]], np.int32)
+    skel_bl = np.zeros((3, 2), np.float32)
+    children, blen, root = treeio.stitch_cluster_trees(
+        skel_ch, skel_bl, 2,
+        [(ch, bl, 2 * n0 - 2, n0), (ch[:1], bl[:1], 0, 1)],
+        [np.arange(n0), np.asarray([n0])])
+    sets = treeio.leaf_sets(children, root, n0 + 1)
+    assert sets[root] == frozenset(range(n0 + 1))
+
+
 def test_newick_roundtrip_structure():
     fam, msa = _reconstruct(6, seed=17)
     D = distance.distance_matrix(msa, gap_code=ab.DNA.gap_code,
