@@ -1,0 +1,169 @@
+"""Serve-layer benchmark: coalesced batching vs sequential request serving.
+
+The serve pillar's claim is that merging concurrent align requests into
+the engine's pow2 (q_width, t_width) buckets turns per-request dispatch
+into a handful of jitted calls. Rows:
+
+  bench/serve/sequential   one ``align_pairs`` call per request (B=1) —
+                           what a service without coalescing pays
+  bench/serve/coalesced    the same requests submitted to the
+                           ``CoalescingAligner`` queue and flushed as
+                           merged bucketed batches
+  bench/serve/incremental  add-to-MSA against the frozen center vs a
+                           full realign of the grown family
+
+Acceptance (ISSUE 4): coalesced throughput >= 3x sequential on >= 200
+mixed-length requests (run without ``--smoke``); the CI smoke uploads
+the small matrix as ``BENCH_serve.json``.
+
+  PYTHONPATH=src python -m benchmarks.bench_serve [--smoke] \\
+      [--requests N] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from .common import emit
+
+
+def _mutate(t, rng, rate=0.03):
+    q = t.copy()
+    nsub = max(1, int(rate * q.size))
+    idx = rng.integers(0, q.size, nsub)
+    q[idx] = rng.integers(0, 4, nsub).astype(np.int8)
+    return q
+
+
+def _requests(n, rng, lmin, lmax):
+    """n single-query requests (query vs its own reference), mixed lengths."""
+    reqs = []
+    for _ in range(n):
+        L = int(rng.integers(lmin, lmax))
+        t = rng.integers(0, 4, L).astype(np.int8)
+        reqs.append((_mutate(t, rng), t, L))
+    return reqs
+
+
+def serve_matrix(smoke: bool = False, n_requests: int | None = None):
+    from repro.align.bucketing import _pow2_widths
+    from repro.core import alphabet as ab
+    from repro.core.msa import MSAConfig
+    from repro.serve.queue import AlignJob, CoalescingAligner
+
+    n = n_requests or (48 if smoke else 320)
+    lmin, lmax = (16, 120) if smoke else (16, 200)
+    rng = np.random.default_rng(0)
+    cfg = MSAConfig(method="plain")
+    engine = cfg.engine()
+    gap = ab.DNA.gap_code
+    reqs = _requests(n, rng, lmin, lmax)
+
+    def pow2pad(x, w):
+        out = np.full((1, w), gap, np.int8)
+        out[0, : x.size] = x
+        return out
+
+    def run_sequential():
+        # an uncoalesced server still pads singles to pow2 buckets — exact
+        # per-length shapes would mean one fresh compile per distinct
+        # request length, which no serving compile cache survives
+        lat = []
+        t0 = time.perf_counter()
+        for q, t, L in reqs:
+            s = time.perf_counter()
+            w = int(_pow2_widths([L], 1 << 20, 32)[0])
+            lens = np.array([L], np.int32)
+            r = engine.align_pairs(pow2pad(q, w), lens, pow2pad(t, w), lens)
+            np.asarray(r.a_row)
+            lat.append(time.perf_counter() - s)
+        return time.perf_counter() - t0, np.sort(np.array(lat))
+
+    def run_coalesced():
+        co = CoalescingAligner(max_batch=n, max_wait_ms=1000.0)
+        t0 = time.perf_counter()
+        futs = [co.submit(AlignJob(Q=q[None, :], qlens=np.array([L], np.int32),
+                                   target=t, tlen=L, engine=engine,
+                                   engine_key="bench"))
+                for q, t, L in reqs]
+        for f in futs:
+            f.result()
+        dt = time.perf_counter() - t0
+        stats = co.stats()
+        co.close()
+        return dt, stats
+
+    # each path runs twice; the first pass compiles every bucket shape it
+    # will hit, the second is the timed, compile-free measurement
+    run_sequential()
+    seq_s, lat = run_sequential()
+    emit("bench/serve/sequential", seq_s * 1e6,
+         f"n={n};rps={n / seq_s:.0f};"
+         f"p50_ms={lat[n // 2] * 1e3:.2f};p95_ms={lat[int(n * .95)] * 1e3:.2f}")
+
+    run_coalesced()
+    co_s, stats = run_coalesced()
+    speedup = seq_s / co_s
+    emit("bench/serve/coalesced", co_s * 1e6,
+         f"n={n};rps={n / co_s:.0f};speedup={speedup:.2f}x;"
+         f"engine_calls={stats['engine_calls']};batches={stats['batches']}")
+    return speedup
+
+
+def incremental_row(smoke: bool = False):
+    from repro.core.msa import MSAConfig, center_star_msa
+    from repro.serve.incremental import add_to_msa
+
+    n_old, n_new, L = (12, 2, 160) if smoke else (48, 4, 400)
+    rng = np.random.default_rng(1)
+    base = "".join(rng.choice(list("ACGT"), L))
+
+    def mut(s):
+        s = list(s)
+        for _ in range(max(2, L // 80)):
+            s[rng.integers(0, len(s))] = "ACGT"[rng.integers(0, 4)]
+        return "".join(s)
+
+    fam = [base] + [mut(base) for _ in range(n_old - 1)]
+    new = [mut(base) for _ in range(n_new)]
+    cfg = MSAConfig(method="plain")
+    prev = center_star_msa(fam, cfg)                    # parent MSA
+    add_to_msa(prev.msa, prev.center_idx, new, cfg)     # warm (compiles)
+    center_star_msa(fam + new, cfg)
+    t0 = time.perf_counter()
+    res = add_to_msa(prev.msa, prev.center_idx, new, cfg)
+    inc_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    full = center_star_msa(fam + new, cfg)
+    full_s = time.perf_counter() - t0
+    identical = bool(np.array_equal(res.msa, full.msa))
+    emit("bench/serve/incremental", inc_s * 1e6,
+         f"n_old={n_old};n_new={n_new};speedup={full_s / inc_s:.2f}x;"
+         f"bit_identical={identical}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog="benchmarks.bench_serve")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CI-budget matrix")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="override the request count")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write emitted rows as JSON to PATH")
+    args = ap.parse_args(argv)
+
+    from . import common
+    print("name,us_per_call,derived")
+    serve_matrix(smoke=args.smoke, n_requests=args.requests)
+    incremental_row(smoke=args.smoke)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(common.ROWS, f, indent=1)
+        print(f"# wrote {len(common.ROWS)} rows to {args.json}")
+
+
+if __name__ == "__main__":
+    main()

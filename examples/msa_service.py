@@ -1,0 +1,90 @@
+"""Client walk-through of the MSA/phylogeny web service (repro.serve).
+
+Starts the service in-process on a free port (the same server
+``python -m repro.launch.serve_msa`` binds), then drives the four
+endpoints with plain stdlib HTTP: align a family, hit the cache, insert
+two new sequences incrementally against the frozen center, and build a
+tree from the cached MSA — printing the coalescing/cache stats each
+response carries.
+
+  PYTHONPATH=src python examples/msa_service.py
+"""
+import json
+import sys
+import threading
+import urllib.request
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np
+
+from repro.serve import MSAService, ServiceConfig, serve_http
+
+
+def post(port, path, obj):
+    req = urllib.request.Request(
+        f"http://127.0.0.1:{port}{path}", data=json.dumps(obj).encode(),
+        headers={"Content-Type": "application/json"})
+    with urllib.request.urlopen(req) as r:
+        return json.loads(r.read())
+
+
+def main():
+    service = MSAService(ServiceConfig(max_wait_ms=5.0))
+    httpd = serve_http(service, "127.0.0.1", 0)
+    port = httpd.server_address[1]
+    threading.Thread(target=httpd.serve_forever, daemon=True).start()
+    print(f"service on 127.0.0.1:{port}")
+
+    rng = np.random.default_rng(0)
+    base = "".join(rng.choice(list("ACGT"), 120))
+
+    def mutate(s, n=3):
+        s = list(s)
+        for _ in range(n):
+            s[rng.integers(0, len(s))] = "ACGT"[rng.integers(0, 4)]
+        return "".join(s)
+
+    fasta = "".join(f">seq{i}\n{mutate(base)}\n" for i in range(6))
+
+    # 1. align a family (FASTA payload, exactly what msa_run reads)
+    r = post(port, "/align", {"fasta": fasta})
+    msa_id = r["alignment"]["msa_id"]
+    print(f"\n/align: width={r['alignment']['width']} "
+          f"cached={r['cached']} path={r['path']} "
+          f"elapsed={r['elapsed_ms']:.1f}ms")
+    for name, row in zip(r["alignment"]["names"], r["alignment"]["rows"]):
+        print(f"  {name:>6} {row}")
+
+    # 2. the same set again -> content-hash cache hit, byte-identical
+    r2 = post(port, "/align", {"fasta": fasta})
+    print(f"\n/align (repeat): cached={r2['cached']} "
+          f"cache_stats={r2['cache']}")
+
+    # 3. incrementally add sequences against the frozen center
+    radd = post(port, "/align/add",
+                {"msa_id": msa_id,
+                 "sequences": [mutate(base), mutate(base, 5)],
+                 "names": ["new0", "new1"]})
+    print(f"\n/align/add: width={radd['alignment']['width']} "
+          f"add={radd['add']}")
+
+    # 4. a tree from the cached MSA (memoized per msa_id + backend)
+    t = post(port, "/tree", {"msa_id": msa_id})
+    print(f"\n/tree: backend={t['backend']} cached_tree={t['cached_tree']}")
+    print(f"  {t['newick']}")
+    t2 = post(port, "/tree", {"msa_id": msa_id})
+    print(f"/tree (repeat): cached_tree={t2['cached_tree']}")
+
+    with urllib.request.urlopen(f"http://127.0.0.1:{port}/healthz") as h:
+        print(f"\n/healthz: {json.loads(h.read())}")
+
+    httpd.shutdown()
+    httpd.server_close()
+    service.drain()
+    print("\ndrained; bye")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,8 @@
-"""Serve a small model with batched requests: prefill + decode with KV /
-SSM caches, mixed prompt lengths via position offsets, latency report.
+"""Serve a small *language model* with batched requests: prefill + decode
+with KV / SSM caches, mixed prompt lengths via position offsets, latency
+report. This exercises the LM path (``repro.launch.serve`` /
+``train.serve_step``) — for the MSA/phylogeny web service the paper
+describes, see ``repro.launch.serve_msa`` and ``examples/msa_service.py``.
 
   PYTHONPATH=src python examples/serve_lm.py --arch mamba2-130m
 """

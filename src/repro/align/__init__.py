@@ -5,5 +5,6 @@ See ``engine.AlignEngine`` (host API: bucketing + fallback),
 registry), ``banded`` (O(n·W) diagonal-band Gotoh), and ``bucketing``
 (power-of-two length buckets).
 """
-from .backends import BACKENDS, BatchAlignment, resolve_backend  # noqa: F401
-from .engine import AlignEngine, EngineResult  # noqa: F401
+from .backends import (BACKENDS, PAIR_BACKENDS, BatchAlignment,  # noqa: F401
+                       resolve_backend)
+from .engine import AlignEngine, EngineResult, PairsResult  # noqa: F401

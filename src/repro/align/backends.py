@@ -15,6 +15,13 @@ full-DP re-alignment — only the ``banded`` backend ever clears it).
 
 All three are registered in ``BACKENDS`` so the engine, the shard_map
 pipeline, and the benchmarks dispatch by name.
+
+Each backend also has a *pairs* variant (``*_align_pairs``,
+``PAIR_BACKENDS``) with per-pair targets ``T (B, m)`` instead of one
+broadcast ``b`` — the batch-entry contract that lets
+``AlignEngine.align_pairs`` merge pre-encoded requests from many callers
+(each with its own center) into one jitted call. ``repro.serve.queue``
+is the consumer.
 """
 from __future__ import annotations
 
@@ -81,10 +88,63 @@ def banded_align_batch(Q, lens, b, lb, sub, *, gap_open, gap_extend,
     return jax.vmap(one)(Q, lens.astype(jnp.int32))
 
 
+@functools.partial(jax.jit, static_argnames=("gap_open", "gap_extend",
+                                             "local", "gap_code"))
+def jnp_align_pairs(Q, qlens, T, tlens, sub, *, gap_open, gap_extend,
+                    local=False, gap_code=5):
+    f = lambda q, lq, t, lt: pairwise.align_pair(
+        q, lq, t, lt, sub, gap_open=gap_open, gap_extend=gap_extend,
+        local=local, gap_code=gap_code)
+    res = jax.vmap(f)(Q, qlens.astype(jnp.int32), T, tlens.astype(jnp.int32))
+    return BatchAlignment(res.score, res.a_row, res.b_row, res.aln_len,
+                          jnp.ones(Q.shape[0], jnp.bool_))
+
+
+@functools.partial(jax.jit, static_argnames=("gap_open", "gap_extend",
+                                             "local", "gap_code",
+                                             "block_rows", "interpret"))
+def pallas_align_pairs(Q, qlens, T, tlens, sub, *, gap_open, gap_extend,
+                       local=False, gap_code=5, block_rows=128,
+                       interpret=None):
+    # the kernel already takes a (B, m) target batch — the broadcast path
+    # above is just this with T = tile(b); per-pair targets come for free
+    B, n = Q.shape
+    lens2 = jnp.stack([qlens.astype(jnp.int32), tlens.astype(jnp.int32)],
+                      axis=1)
+    fwd = gotoh_forward_pallas(Q, T, lens2, sub, gap_open=gap_open,
+                               gap_extend=gap_extend, local=local,
+                               block_rows=min(block_rows, max(n, 1)),
+                               interpret=interpret)
+    a_row, b_row, k = jax.vmap(
+        lambda a_, b_, f: pairwise.traceback(a_, b_, f, gap_code))(Q, T, fwd)
+    return BatchAlignment(fwd.score, a_row, b_row, k,
+                          jnp.ones(B, jnp.bool_))
+
+
+@functools.partial(jax.jit, static_argnames=("gap_open", "gap_extend",
+                                             "band", "gap_code"))
+def banded_align_pairs(Q, qlens, T, tlens, sub, *, gap_open, gap_extend,
+                       band=64, gap_code=5):
+    def one(q, lq, t, lt):
+        fwd = banded_mod.banded_forward(q, lq, t, lt, sub, gap_open,
+                                        gap_extend, band=band)
+        a_row, b_row, k, ok = banded_mod.banded_traceback(
+            q, t, fwd, gap_code, band=band)
+        return BatchAlignment(fwd.score, a_row, b_row, k, ok)
+    return jax.vmap(one)(Q, qlens.astype(jnp.int32), T,
+                         tlens.astype(jnp.int32))
+
+
 BACKENDS = {
     "jnp": jnp_align_batch,
     "pallas": pallas_align_batch,
     "banded": banded_align_batch,
+}
+
+PAIR_BACKENDS = {
+    "jnp": jnp_align_pairs,
+    "pallas": pallas_align_pairs,
+    "banded": banded_align_pairs,
 }
 
 

@@ -15,6 +15,15 @@ engine. It owns:
 ``batch_fn`` exposes the raw jit-compatible backend primitive for use
 inside jitted pipelines (``dist.mapreduce`` calls it under shard_map,
 where host-side bucketing and fallback control flow are impossible).
+
+Two host batch APIs:
+
+  ``align_to_center``  one broadcast target — the MSA map(1) stage
+  ``align_pairs``      per-pair targets — the batch-entry API that lets
+                       ``repro.serve`` coalesce pre-encoded requests from
+                       many callers (each with its own center) into pow2
+                       (q_width, t_width) buckets, one jitted call per
+                       bucket (``PairsResult.n_calls`` reports how many)
 """
 from __future__ import annotations
 
@@ -33,6 +42,16 @@ class EngineResult(NamedTuple):
     b_row: jnp.ndarray      # (B, P) int8 aligned target rows
     aln_len: jnp.ndarray    # (B,) i32
     n_fallback: int         # pairs re-aligned with full DP (banded only)
+
+
+class PairsResult(NamedTuple):
+    score: jnp.ndarray      # (B,) f32
+    a_row: jnp.ndarray      # (B, P) int8 gap-padded aligned queries
+    b_row: jnp.ndarray      # (B, P) int8 aligned per-pair targets
+    aln_len: jnp.ndarray    # (B,) i32
+    n_fallback: int         # pairs re-aligned with full DP (banded only)
+    n_calls: int            # backend invocations (buckets + fallbacks) —
+                            # the coalescing metric repro.serve reports
 
 
 def _pad_cols(x, width: int, fill):
@@ -172,6 +191,128 @@ class AlignEngine:
             b_rows = b_rows.at[ix].set(_pad_cols(res.b_row, P, self.gap_code))
             aln_len = aln_len.at[ix].set(res.aln_len)
         return EngineResult(score, a_rows, b_rows, aln_len, len(bad))
+
+    def pairs_fn(self, *, local: Optional[bool] = None):
+        """(Q, qlens, T, tlens) -> BatchAlignment with per-pair targets.
+
+        The batch-entry primitive: every row carries its own target, so a
+        single jitted call can serve pre-encoded requests from many
+        callers — each request's center becomes that row's target
+        (``repro.serve.queue`` builds such batches). Safe inside
+        jit/shard_map; ``local`` overrides as in ``batch_fn``.
+        """
+        be = self.backend
+        loc = self.local if local is None else local
+        if be == "banded" and loc:
+            be = "jnp"
+
+        def fn(Q, qlens, T, tlens):
+            if be == "pallas":
+                return backends.pallas_align_pairs(
+                    Q, qlens, T, tlens, self.sub, gap_open=self.gap_open,
+                    gap_extend=self.gap_extend, local=loc,
+                    gap_code=self.gap_code, block_rows=self.block_rows,
+                    interpret=self.interpret)
+            if be == "banded":
+                return backends.banded_align_pairs(
+                    Q, qlens, T, tlens, self.sub, gap_open=self.gap_open,
+                    gap_extend=self.gap_extend, band=self.band,
+                    gap_code=self.gap_code)
+            return backends.jnp_align_pairs(
+                Q, qlens, T, tlens, self.sub, gap_open=self.gap_open,
+                gap_extend=self.gap_extend, local=loc,
+                gap_code=self.gap_code)
+        return fn
+
+    def _full_dp_pairs_fn(self):
+        """Full-DP global pairs primitive for per-pair fallbacks."""
+        def fn(Q, qlens, T, tlens):
+            if self.backend == "pallas":
+                return backends.pallas_align_pairs(
+                    Q, qlens, T, tlens, self.sub, gap_open=self.gap_open,
+                    gap_extend=self.gap_extend, local=False,
+                    gap_code=self.gap_code, block_rows=self.block_rows,
+                    interpret=self.interpret)
+            return backends.jnp_align_pairs(
+                Q, qlens, T, tlens, self.sub, gap_open=self.gap_open,
+                gap_extend=self.gap_extend, local=False,
+                gap_code=self.gap_code)
+        return fn
+
+    def align_pairs(self, Q, qlens, T, tlens) -> PairsResult:
+        """Bucketed batch-entry map(1): row i of ``Q`` against row i of ``T``.
+
+        Q: (B, Lq) int8, T: (B, Lt) int8, qlens/tlens: (B,). Pairs are
+        grouped into pow2 (q_width, t_width) buckets
+        (``bucketing.pair_bucket_plan``) so one jitted call per bucket
+        serves every caller whose request landed in it; output rows are
+        (B, Lq + Lt) with trailing (gap, gap) dead padding. ``n_calls``
+        counts backend invocations — the coalescing win is B requests
+        serviced in <= log2(Lq)·log2(Lt) calls.
+        """
+        Q = jnp.asarray(Q)
+        T = jnp.asarray(T)
+        qlens = jnp.asarray(qlens, jnp.int32)
+        tlens = jnp.asarray(tlens, jnp.int32)
+        B, Lq = Q.shape
+        Lt = T.shape[1]
+        P = Lq + Lt
+        if B == 0:
+            z = jnp.zeros((0,), jnp.float32)
+            r = jnp.zeros((0, P), jnp.int8)
+            return PairsResult(z, r, r, jnp.zeros((0,), jnp.int32), 0, 0)
+        fn = self.pairs_fn()
+
+        if not self.bucket:
+            out = fn(Q, qlens, T, tlens)
+            return self._apply_pairs_fallback(out, Q, qlens, T, tlens, P,
+                                              n_calls=1)
+
+        plan = bucketing.pair_bucket_plan(np.asarray(qlens),
+                                          np.asarray(tlens), Lq, Lt,
+                                          min_bucket=self.min_bucket)
+        if len(plan) == 1:
+            wq, wt, _ = plan[0]
+            out = fn(Q[:, :wq], qlens, T[:, :wt], tlens)
+            return self._apply_pairs_fallback(out, Q, qlens, T, tlens, P,
+                                              n_calls=1)
+
+        score = jnp.zeros((B,), jnp.float32)
+        a_rows = jnp.full((B, P), self.gap_code, jnp.int8)
+        b_rows = jnp.full((B, P), self.gap_code, jnp.int8)
+        aln_len = jnp.zeros((B,), jnp.int32)
+        ok = np.ones((B,), bool)
+        for wq, wt, idx in plan:
+            ix = jnp.asarray(idx)
+            out = fn(Q[ix, :wq], qlens[ix], T[ix, :wt], tlens[ix])
+            score = score.at[ix].set(out.score)
+            a_rows = a_rows.at[ix].set(_pad_cols(out.a_row, P, self.gap_code))
+            b_rows = b_rows.at[ix].set(_pad_cols(out.b_row, P, self.gap_code))
+            aln_len = aln_len.at[ix].set(out.aln_len)
+            ok[idx] = np.asarray(out.ok)
+        merged = backends.BatchAlignment(score, a_rows, b_rows, aln_len,
+                                         jnp.asarray(ok))
+        return self._apply_pairs_fallback(merged, Q, qlens, T, tlens, P,
+                                          n_calls=len(plan))
+
+    def _apply_pairs_fallback(self, out: backends.BatchAlignment, Q, qlens,
+                              T, tlens, P: int, *, n_calls: int
+                              ) -> PairsResult:
+        """Full-DP re-alignment of pairs the backend flagged (band overflow)."""
+        bad = np.flatnonzero(~np.asarray(out.ok))
+        score = out.score
+        a_rows = _pad_cols(out.a_row, P, self.gap_code)
+        b_rows = _pad_cols(out.b_row, P, self.gap_code)
+        aln_len = out.aln_len
+        if len(bad):
+            ix = jnp.asarray(bad)
+            res = self._full_dp_pairs_fn()(Q[ix], qlens[ix], T[ix], tlens[ix])
+            score = score.at[ix].set(res.score)
+            a_rows = a_rows.at[ix].set(_pad_cols(res.a_row, P, self.gap_code))
+            b_rows = b_rows.at[ix].set(_pad_cols(res.b_row, P, self.gap_code))
+            aln_len = aln_len.at[ix].set(res.aln_len)
+            n_calls += 1
+        return PairsResult(score, a_rows, b_rows, aln_len, len(bad), n_calls)
 
     def realign_failed(self, Q, lens, b, lb, a_rows, b_rows, ok):
         """Full-DP re-alignment of k-mer chain failures, merged device-side.

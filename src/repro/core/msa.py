@@ -165,6 +165,60 @@ def encode_for_msa(seqs: Sequence[str], cfg: MSAConfig):
          if cfg.alphabet == "rna" else s for s in seqs], cfg.alpha())
 
 
+def map1_align_to_center(Q, qlens, center, lc, cfg: MSAConfig, engine=None):
+    """The map(1) stage on its own: a query batch against a frozen center.
+
+    Returns ``(a_rows, b_rows, n_fallback)`` — the per-pair aligned rows
+    every downstream consumer (``assemble_center_star`` here, the
+    incremental add-to-MSA path in ``repro.serve.incremental``) feeds to
+    the reduce(1)/map(2) assembly. Kept separate from ``center_star_msa``
+    so incremental alignment of *new* sequences runs the exact same code
+    path as a full realign — the bit-identity the serve tests pin depends
+    on it.
+    """
+    gap = cfg.alpha().gap_code
+    sub = cfg.matrix()
+    engine = cfg.engine() if engine is None else engine
+    if cfg.method == "kmer":
+        table = kmer_index.build_center_index(center, lc, k=cfg.k)
+        a_rows, b_rows, ok = kmer_align_batch(
+            Q, qlens, center, lc, table, sub, k=cfg.k, stride=cfg.stride,
+            max_anchors=cfg.max_anchors, max_seg=cfg.max_seg,
+            gap_open=cfg.gap_open, gap_extend=cfg.gap_extend, gap_code=gap)
+        # chain failures re-align through the engine; rows stay on device
+        return engine.realign_failed(Q, qlens, center, lc, a_rows, b_rows, ok)
+    res = engine.align_to_center(Q, qlens, center, lc)
+    return res.a_row, res.b_row, res.n_fallback
+
+
+def assemble_center_star(a_rows, b_rows, center, lc, *, others, cidx: int,
+                         n_total: int, gap: int):
+    """reduce(1) + map(2): merge insert profiles, rebuild rows, place center.
+
+    ``a_rows``/``b_rows`` are the map(1) pair alignments for the ``others``
+    rows (any width — dead (gap, gap) columns are ignored). Returns
+    ``(msa, width)`` with rows in original order. Shared by
+    ``center_star_msa`` and the coalesced request path in
+    ``repro.serve.service`` (which obtains the pair alignments through
+    ``AlignEngine.align_pairs`` batched across callers).
+    """
+    num_slots = int(center.shape[0]) + 1
+    g = centerstar.gap_profiles(a_rows, b_rows,
+                                gap_code=gap, num_slots=num_slots)
+    G = centerstar.merge_profiles(g)
+    width = centerstar.msa_width(G, int(lc))
+
+    rows = centerstar.build_rows(a_rows, b_rows, G,
+                                 gap_code=gap, out_len=width)
+    crow = centerstar.center_msa_row(center, lc, G, gap_code=gap,
+                                     out_len=width)
+
+    msa = np.full((n_total, width), gap, np.int8)
+    msa[np.asarray(others)] = np.asarray(rows)
+    msa[cidx] = np.asarray(crow)
+    return msa, width
+
+
 def center_star_msa(seqs: Sequence[str] | np.ndarray,
                     cfg: MSAConfig,
                     lens: Optional[np.ndarray] = None) -> MSAResult:
@@ -179,7 +233,6 @@ def center_star_msa(seqs: Sequence[str] | np.ndarray,
     if N < 2:
         # center selection never runs; the effective mode is trivially first
         return MSAResult(np.asarray(S), 0, 0, Lmax, "first")
-    sub = cfg.matrix()
 
     cidx, center_mode = _select_center(S, lens, cfg)
     center = S[cidx]
@@ -187,33 +240,11 @@ def center_star_msa(seqs: Sequence[str] | np.ndarray,
     others = np.array([i for i in range(N) if i != cidx])
     Q, qlens = S[jnp.asarray(others)], lens[jnp.asarray(others)]
 
-    engine = cfg.engine()
-    if cfg.method == "kmer":
-        table = kmer_index.build_center_index(center, lc, k=cfg.k)
-        a_rows, b_rows, ok = kmer_align_batch(
-            Q, qlens, center, lc, table, sub, k=cfg.k, stride=cfg.stride,
-            max_anchors=cfg.max_anchors, max_seg=cfg.max_seg,
-            gap_open=cfg.gap_open, gap_extend=cfg.gap_extend, gap_code=gap)
-        # chain failures re-align through the engine; rows stay on device
-        a_rows, b_rows, n_fallback = engine.realign_failed(
-            Q, qlens, center, lc, a_rows, b_rows, ok)
-    else:
-        res = engine.align_to_center(Q, qlens, center, lc)
-        a_rows, b_rows, n_fallback = res.a_row, res.b_row, res.n_fallback
-
-    num_slots = int(center.shape[0]) + 1
-    g = centerstar.gap_profiles(a_rows, b_rows,
-                                gap_code=gap, num_slots=num_slots)
-    G = centerstar.merge_profiles(g)
-    width = centerstar.msa_width(G, int(lc))
-
-    rows = centerstar.build_rows(a_rows, b_rows, G,
-                                 gap_code=gap, out_len=width)
-    crow = centerstar.center_msa_row(center, lc, G, gap_code=gap, out_len=width)
-
-    msa = np.full((N, width), gap, np.int8)
-    msa[others] = np.asarray(rows)
-    msa[cidx] = np.asarray(crow)
+    a_rows, b_rows, n_fallback = map1_align_to_center(Q, qlens, center, lc,
+                                                      cfg)
+    msa, width = assemble_center_star(a_rows, b_rows, center, lc,
+                                      others=others, cidx=int(cidx),
+                                      n_total=N, gap=gap)
     return MSAResult(msa, int(cidx), n_fallback, width, center_mode)
 
 

@@ -1,2 +1,2 @@
-from .fasta import read_fasta, write_fasta
+from .fasta import iter_fasta, read_fasta, write_fasta
 from .datasets import SimConfig, simulate_family, phi_dna, phi_rna, phi_protein

@@ -19,6 +19,12 @@ Shard-count bookkeeping: shard_map needs the sequence count to divide the
 data-axis size; ``pad_rows`` adds empty-query rows (length 0) that align to
 all-gap rows and contribute nothing to the merged profile, and
 ``unpad_rows`` drops them again.
+
+Consumers: ``launch/msa_run --dist`` (batch CLI), ``repro.serve`` (the
+web service routes requests of >= ``dist_threshold`` sequences through
+``msa_over_mesh`` and shard-maps ``/tree`` distance strips through
+``distance_strip_over_mesh`` / ``nearest_anchor_over_mesh`` on the same
+mesh), and ``launch/dryrun`` (512-device lower+compile sweeps).
 """
 from __future__ import annotations
 

@@ -1,0 +1,60 @@
+"""Generate docs/CLI.md from the launchers' own argparse definitions.
+
+The reference is generated once (``python -m repro.launch.cli_docs``) and
+committed; ``tests/test_docs.py`` regenerates it in memory and fails when
+a flag changed without the doc — the drift check the CI docs job runs.
+Width is pinned via COLUMNS so the rendering is terminal-independent.
+"""
+from __future__ import annotations
+
+import importlib
+import os
+from pathlib import Path
+
+# module name -> parser factory attribute (all expose build_parser())
+CLIS = [
+    "repro.launch.msa_run",
+    "repro.launch.tree_run",
+    "repro.launch.serve_msa",
+    "repro.launch.serve",
+    "repro.launch.train",
+]
+
+HEADER = """\
+# CLI reference
+
+Generated from each launcher's `argparse` definition by
+`PYTHONPATH=src python -m repro.launch.cli_docs` — do not edit by hand;
+`tests/test_docs.py::test_cli_reference_not_drifted` fails when a flag
+changes without regenerating. The architecture behind these commands is
+mapped in [ARCHITECTURE.md](ARCHITECTURE.md).
+"""
+
+
+def render() -> str:
+    old = os.environ.get("COLUMNS")
+    os.environ["COLUMNS"] = "79"            # argparse help wraps on this
+    try:
+        parts = [HEADER]
+        for mod_name in CLIS:
+            mod = importlib.import_module(mod_name)
+            helptext = mod.build_parser().format_help().rstrip()
+            parts.append(f"\n## `python -m {mod_name}`\n\n"
+                         f"```text\n{helptext}\n```\n")
+        return "".join(parts)
+    finally:
+        if old is None:
+            os.environ.pop("COLUMNS", None)
+        else:
+            os.environ["COLUMNS"] = old
+
+
+def main():
+    out = Path(__file__).resolve().parents[3] / "docs" / "CLI.md"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(render())
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -17,6 +17,25 @@ Pallas kernel on TPU, jnp scan elsewhere; ``banded`` = O(n·band) memory).
 stage (``nj`` = dense; ``tiled`` composes with ``--dist`` by shard-mapping
 the distance strips over the same mesh); ``repro.launch.tree_run``
 rebuilds a tree from an already-aligned FASTA without redoing the MSA.
+
+Flags:
+  --fasta               input FASTA (required)
+  --out                 output directory (aligned.fasta, tree.nwk,
+                        report.json); default msa_out
+  --method              kmer | plain | sw map(1) path (kmer = the paper's
+                        trie-accelerated anchor chaining)
+  --alphabet            dna | rna | protein (picks encoding + matrix;
+                        protein uses BLOSUM62, gap_open 11)
+  --tree                nj | cluster | tiled | auto | none tree backend
+  --cluster-threshold   N at or below which cluster/auto fall back to
+                        dense NJ
+  --tree-ll             record the tree's JC69 log-likelihood (DNA/RNA)
+  --k                   k-mer width for the kmer method / sampled center
+  --backend / --band    map(1) DP backend registry + band width
+  --dist / --mesh       run the shard_map pipeline over a DxM mesh
+
+``docs/CLI.md`` holds the generated ``--help`` reference for every
+launcher (kept in sync by ``tests/test_docs.py``).
 """
 from __future__ import annotations
 
@@ -28,8 +47,11 @@ from pathlib import Path
 import jax.numpy as jnp
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.msa_run",
+        description="distributed MSA launcher: FASTA in, aligned FASTA + "
+                    "tree out")
     ap.add_argument("--fasta", required=True)
     ap.add_argument("--out", default="msa_out")
     ap.add_argument("--method", default="kmer",
@@ -57,7 +79,11 @@ def main(argv=None):
     ap.add_argument("--mesh", default=None,
                     help="data x model for --dist, e.g. 4x1; default: all "
                          "visible devices x 1")
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
 
     from ..core import alphabet as ab
     from ..core import likelihood, sp_score, treeio

@@ -1,7 +1,18 @@
 """LM serving launcher: batched prefill + decode loop with KV/SSM caches.
 
+This is the *language-model* serving path (one-shot benchmark of the
+``train.serve_step`` prefill/decode builders) — the MSA/phylogeny web
+service lives in ``repro.launch.serve_msa``.
+
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --smoke \
       --batch 4 --prompt-len 32 --gen 16
+
+Flags:
+  --arch          reference architecture name (repro.configs registry)
+  --batch         concurrent decode sequences
+  --prompt-len    prefill length (tokens)
+  --gen           tokens to generate per sequence
+  --smoke         use the reduced smoke config (CPU-friendly)
 """
 from __future__ import annotations
 
@@ -9,14 +20,21 @@ import argparse
 import time
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.serve",
+        description="LM serving benchmark: batched prefill + decode with "
+                    "KV/SSM caches (MSA service: repro.launch.serve_msa)")
     ap.add_argument("--arch", required=True)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--smoke", action="store_true")
-    args = ap.parse_args()
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
 
     import jax
     import jax.numpy as jnp

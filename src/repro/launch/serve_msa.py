@@ -1,0 +1,131 @@
+"""MSA/phylogeny web service launcher: the paper's web-server pillar.
+
+  PYTHONPATH=src python -m repro.launch.serve_msa --port 8642 \\
+      [--method plain --backend auto] [--dist --mesh 4x1]
+
+Serves ``repro.serve.MSAService`` over stdlib HTTP/JSON:
+
+  POST /align      {"fasta": ">a\\nACGT..."} or {"sequences": [...],
+                   "names": [...]} -> aligned rows + msa_id
+  POST /align/add  {"msa_id": ..., "fasta"/"sequences": ...} ->
+                   incremental insertion against the frozen center
+  POST /tree       {"msa_id": ...} or sequences -> Newick
+  GET  /healthz    liveness + cache / coalescing-queue stats
+
+Flags:
+  --host/--port         bind address (default 127.0.0.1:8642)
+  --alphabet            dna | rna | protein (server-wide engine config)
+  --method              plain | sw | kmer map(1) path; kmer requests run
+                        uncoalesced (per-center index)
+  --backend/--band      repro.align DP backend registry + band width
+  --k/--center          k-mer width / center selection policy
+  --max-batch           coalescing: flush a merged batch at this many pairs
+  --max-wait-ms         coalescing: max time a request waits for company
+  --cache-mb            result-cache byte budget (content-hash LRU)
+  --drift-threshold     /align/add width growth past which a full realign
+                        replaces the incremental merge
+  --tree-backend        repro.phylo registry default for /tree
+  --cluster-threshold   N at or below which cluster/auto trees go dense
+  --dist/--mesh         shard requests of >= --dist-threshold sequences
+                        over the mesh (repro.dist.mapreduce) and shard-map
+                        /tree distance strips over it
+  --verbose             log one line per HTTP request
+
+SIGINT/SIGTERM drain gracefully: the listener stops, in-flight requests
+finish, and the coalescing queue flushes before exit.
+"""
+from __future__ import annotations
+
+import argparse
+import signal
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.serve_msa",
+        description="MSA/phylogeny web service over the repro engines")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8642)
+    ap.add_argument("--alphabet", default="dna",
+                    choices=["dna", "rna", "protein"])
+    ap.add_argument("--method", default="plain",
+                    choices=["plain", "sw", "kmer"],
+                    help="map(1) path; kmer requests run uncoalesced")
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "jnp", "pallas", "banded"],
+                    help="map(1) DP backend (repro.align registry)")
+    ap.add_argument("--band", type=int, default=64,
+                    help="band width for --backend banded")
+    ap.add_argument("--k", type=int, default=11, help="k-mer width")
+    ap.add_argument("--center", default="first",
+                    choices=["first", "sampled"],
+                    help="center selection policy")
+    ap.add_argument("--max-batch", type=int, default=256,
+                    help="coalescing: flush at this many merged pairs")
+    ap.add_argument("--max-wait-ms", type=float, default=5.0,
+                    help="coalescing: max wait for request company")
+    ap.add_argument("--cache-mb", type=int, default=256,
+                    help="result cache byte budget (MiB)")
+    ap.add_argument("--drift-threshold", type=float, default=0.25,
+                    help="align/add relative width growth forcing a full "
+                         "realign")
+    ap.add_argument("--tree-backend", default="auto",
+                    choices=["auto", "dense", "tiled", "cluster"],
+                    help="default /tree backend (repro.phylo registry)")
+    ap.add_argument("--cluster-threshold", type=int, default=64,
+                    help="N at or below which cluster/auto trees go dense")
+    ap.add_argument("--dist", action="store_true",
+                    help="route large requests through repro.dist.mapreduce")
+    ap.add_argument("--mesh", default=None,
+                    help="data x model for --dist, e.g. 4x1; default: all "
+                         "visible devices x 1")
+    ap.add_argument("--dist-threshold", type=int, default=512,
+                    help="with --dist: sequence count at which a request "
+                         "goes over the mesh")
+    ap.add_argument("--verbose", action="store_true",
+                    help="log one line per HTTP request")
+    return ap
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
+
+    from ..serve import MSAService, ServiceConfig, serve_http
+
+    mesh = None
+    if args.dist:
+        from .mesh import mesh_from_arg
+        mesh = mesh_from_arg(args.mesh)
+    service = MSAService(ServiceConfig(
+        alphabet=args.alphabet, method=args.method, backend=args.backend,
+        band=args.band, k=args.k, center=args.center,
+        max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
+        cache_bytes=args.cache_mb << 20,
+        drift_threshold=args.drift_threshold,
+        tree_backend=args.tree_backend,
+        cluster_threshold=args.cluster_threshold,
+        mesh=mesh, dist_threshold=args.dist_threshold))
+    httpd = serve_http(service, args.host, args.port, verbose=args.verbose)
+
+    def _shutdown(signum, frame):
+        # runs on the main thread; shutdown() must come from another
+        # thread, so just flip the flag serve_forever polls
+        raise KeyboardInterrupt
+
+    signal.signal(signal.SIGTERM, _shutdown)
+    print(f"serving MSA/phylogeny on http://{args.host}:{args.port} "
+          f"(alphabet={args.alphabet} method={args.method} "
+          f"backend={service.engine.backend}"
+          f"{' mesh' if mesh is not None else ''}) — Ctrl-C drains")
+    try:
+        httpd.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    print("draining: finishing in-flight requests ...")
+    httpd.server_close()          # waits for handler threads
+    service.drain()               # flush the coalescing queue
+    print("drained; bye")
+
+
+if __name__ == "__main__":
+    main()

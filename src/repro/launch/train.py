@@ -4,6 +4,18 @@ restore. Scaled to whatever devices exist (1 CPU here; a pod in prod).
 
   PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --steps 100 \
       --batch 8 --seq 128 --ckpt-dir ckpt/ [--smoke] [--resume]
+
+Flags:
+  --arch          reference architecture name (repro.configs registry)
+  --steps         optimizer steps to run
+  --batch/--seq   global batch size / sequence length
+  --micro         microbatch count (gradient accumulation)
+  --lr            AdamW learning rate
+  --ckpt-dir      checkpoint directory (enables async atomic saves)
+  --ckpt-every    save cadence in steps
+  --smoke         reduced smoke config (CPU-friendly)
+  --mesh          data x model device mesh, e.g. 4x2
+  --resume        restore the newest checkpoint in --ckpt-dir first
 """
 from __future__ import annotations
 
@@ -12,8 +24,10 @@ import functools
 import time
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.train",
+        description="LM training with the full resilience stack")
     ap.add_argument("--arch", required=True)
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--batch", type=int, default=8)
@@ -28,6 +42,11 @@ def main():
                     help="data x model, e.g. 4x2 (needs that many devices)")
     ap.add_argument("--resume", action="store_true",
                     help="restore the newest checkpoint in --ckpt-dir first")
+    return ap
+
+
+def main():
+    ap = build_parser()
     args = ap.parse_args()
     if args.resume and not args.ckpt_dir:
         ap.error("--resume requires --ckpt-dir")

@@ -10,6 +10,19 @@ and it dispatches through the ``repro.phylo.TreeEngine``.
 Outputs ``tree.nwk`` and ``report.json`` (effective backend, timings, and
 for tiled backends the tile accountant's memory stats — peak resident
 distance storage vs the one-row-block-strip budget).
+
+Flags:
+  --fasta               aligned FASTA, equal-width rows (required)
+  --out                 output directory; default tree_out
+  --alphabet            dna | rna | protein row encoding
+  --backend             auto | dense | tiled | cluster (repro.phylo)
+  --cluster-threshold   N at or below which cluster/auto go dense
+  --row-block           tiled backend's strip height (per-host distance
+                        budget = row_block * N * 4 bytes)
+  --target-cluster      desired leaves per HPTree cluster
+  --seed                sketch-sampling seed
+  --tree-ll             also score the tree by JC69 log-likelihood
+  --dist / --mesh       shard-map the distance strips over a DxM mesh
 """
 from __future__ import annotations
 
@@ -20,8 +33,10 @@ from pathlib import Path
 import numpy as np
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.tree_run",
+        description="tree reconstruction from an already-aligned FASTA")
     ap.add_argument("--fasta", required=True,
                     help="aligned FASTA (equal-width rows, '-' for gaps)")
     ap.add_argument("--out", default="tree_out")
@@ -47,7 +62,11 @@ def main(argv=None):
     ap.add_argument("--mesh", default=None,
                     help="data x model for --dist, e.g. 4x1; default: all "
                          "visible devices x 1")
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
 
     from ..core import alphabet as ab
     from ..core import likelihood

@@ -121,9 +121,21 @@ class TreeEngine:
                                     row_block=self.row_block)
 
     def build(self, msa, *,
-              accountant: Optional[tiles.TileAccountant] = None
-              ) -> PhyloResult:
-        """Reconstruct a tree from aligned (N, L) int8 rows."""
+              accountant: Optional[tiles.TileAccountant] = None,
+              cache: Optional[dict] = None,
+              cache_key: Optional[str] = None) -> PhyloResult:
+        """Reconstruct a tree from aligned (N, L) int8 rows.
+
+        ``cache``/``cache_key`` is the tree-from-cached-MSA hook used by
+        ``repro.serve``: when a mutable mapping and a key (the service's
+        content-hash MSA id + backend) are given, a hit returns the stored
+        ``PhyloResult`` without touching the distance machinery, and a
+        miss stores the freshly built result under that key. The engine
+        itself stays stateless — the caller owns the mapping's lifetime
+        and eviction policy.
+        """
+        if cache is not None and cache_key is not None and cache_key in cache:
+            return cache[cache_key]
         msa_np = np.asarray(msa)
         n = msa_np.shape[0]
         if n < 2:
@@ -160,5 +172,9 @@ class TreeEngine:
         if eff.startswith("tiled"):
             tile_stats = dict(acct.stats(),
                               row_block_bytes=self.row_block * n * 4)
-        return PhyloResult(np.asarray(children), np.asarray(blen), int(root),
-                           n, eff, self.backend, timings, tile_stats)
+        result = PhyloResult(np.asarray(children), np.asarray(blen),
+                             int(root), n, eff, self.backend, timings,
+                             tile_stats)
+        if cache is not None and cache_key is not None:
+            cache[cache_key] = result
+        return result

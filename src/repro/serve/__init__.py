@@ -1,0 +1,23 @@
+"""repro.serve — the paper's web-service layer over the existing engines.
+
+HAlign-II's third contribution is "a user-friendly web server based on
+our distributed computing infrastructure"; this package is that layer,
+reusing the engines instead of re-implementing them:
+
+  ``cache``        content-hash result cache over canonicalized sequence
+                   sets (LRU + byte budget, hit/miss stats)
+  ``queue``        deadline-aware coalescing: concurrent align requests
+                   merge into ``AlignEngine.align_pairs``'s pow2 buckets
+                   so one jitted call serves many callers
+  ``incremental``  add-to-MSA against a frozen center + merged gap
+                   pattern — bit-identical columns for already-aligned
+                   members, full realign past a drift threshold
+  ``service``      the MSAService facade + stdlib HTTP/JSON front end
+                   (``/align``, ``/align/add``, ``/tree``, ``/healthz``)
+
+``repro.launch.serve_msa`` is the CLI entry point.
+"""
+from .cache import ResultCache, canonical_key, canonicalize  # noqa: F401
+from .incremental import AddResult, add_to_msa  # noqa: F401
+from .queue import AlignJob, CoalescingAligner  # noqa: F401
+from .service import MSAService, ServiceConfig, serve_http  # noqa: F401

@@ -1,0 +1,177 @@
+"""Deadline-aware request coalescing for the align service.
+
+The expensive unit of work in a center-star request is map(1): a batch of
+queries against that request's center. Concurrent requests each carry a
+*different* center, so they cannot share the broadcast-center primitive —
+but they can share ``AlignEngine.align_pairs``: every (query, center)
+pair becomes one row of a per-pair-target batch, and the engine's pow2
+(q_width, t_width) bucketing turns the merged batch into at most
+log2(Lq)·log2(Lt) jitted calls no matter how many callers contributed.
+
+Scheduling is max-wait / max-batch: a submitted job waits at most
+``max_wait_ms`` for company (the deadline), and a group is flushed early
+the moment it reaches ``max_batch`` pairs. One worker thread executes
+groups serially — device work is serialized anyway; the coalescing win is
+batching, not concurrency. Jobs only merge within an ``engine_key``
+(same alphabet/scoring/backend), and ``close()`` drains: everything
+already submitted completes, new submissions are refused.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class AlignJob:
+    """One caller's map(1) work unit: queries against a frozen center."""
+    Q: np.ndarray          # (B, Lq) int8 encoded queries (gap-padded)
+    qlens: np.ndarray      # (B,) int32
+    target: np.ndarray     # (m,) int8 encoded center (unpadded)
+    tlen: int
+    engine: object         # repro.align.AlignEngine
+    engine_key: str        # jobs coalesce only within one key
+
+
+class JobResult(NamedTuple):
+    score: np.ndarray      # (B,) f32
+    a_row: np.ndarray      # (B, P) int8
+    b_row: np.ndarray      # (B, P) int8
+    aln_len: np.ndarray    # (B,) i32
+    meta: dict             # batch_jobs / batch_pairs / engine_calls
+
+
+class CoalescingAligner:
+    """Merge concurrent AlignJobs into bucketed ``align_pairs`` batches."""
+
+    def __init__(self, *, max_batch: int = 256, max_wait_ms: float = 5.0):
+        self.max_batch = int(max_batch)
+        self.max_wait_ms = float(max_wait_ms)
+        self._pending: Dict[str, List[Tuple[float, AlignJob, Future]]] = {}
+        self._cond = threading.Condition()
+        self._closing = False
+        self._stats = {"jobs": 0, "pairs": 0, "batches": 0,
+                       "engine_calls": 0, "coalesced_jobs": 0,
+                       "fallback_pairs": 0}
+        self._in_flight = 0
+        self._worker = threading.Thread(target=self._loop,
+                                        name="coalescing-aligner",
+                                        daemon=True)
+        self._worker.start()
+
+    # ------------------------------------------------------------ public
+
+    def submit(self, job: AlignJob) -> "Future[JobResult]":
+        """Enqueue a job; the returned future resolves to a JobResult."""
+        fut: Future = Future()
+        deadline = time.monotonic() + self.max_wait_ms / 1e3
+        with self._cond:
+            if self._closing:
+                raise RuntimeError("CoalescingAligner is draining; "
+                                   "no new jobs accepted")
+            self._pending.setdefault(job.engine_key, []).append(
+                (deadline, job, fut))
+            self._stats["jobs"] += 1
+            self._stats["pairs"] += int(job.Q.shape[0])
+            self._in_flight += 1
+            self._cond.notify()
+        return fut
+
+    def close(self):
+        """Drain: flush every pending group, finish in-flight work, stop.
+
+        Idempotent; after it returns, all previously returned futures are
+        resolved and ``submit`` raises.
+        """
+        with self._cond:
+            self._closing = True
+            self._cond.notify()
+        self._worker.join()
+
+    def stats(self) -> dict:
+        with self._cond:
+            return dict(self._stats, in_flight=self._in_flight)
+
+    # ------------------------------------------------------------ worker
+
+    def _ready_key(self, now: float) -> Optional[str]:
+        for key, items in self._pending.items():
+            pairs = sum(int(j.Q.shape[0]) for _, j, _ in items)
+            if (self._closing or pairs >= self.max_batch
+                    or min(d for d, _, _ in items) <= now):
+                return key
+        return None
+
+    def _loop(self):
+        while True:
+            with self._cond:
+                while True:
+                    now = time.monotonic()
+                    key = self._ready_key(now)
+                    if key is not None:
+                        items = self._pending.pop(key)
+                        break
+                    if self._closing and not self._pending:
+                        return
+                    if self._pending:
+                        nxt = min(d for items in self._pending.values()
+                                  for d, _, _ in items)
+                        self._cond.wait(timeout=max(nxt - now, 0.0))
+                    else:
+                        self._cond.wait()
+            self._run_batch(items)
+            with self._cond:
+                self._in_flight -= len(items)
+                self._cond.notify()
+
+    def _run_batch(self, items):
+        jobs = [j for _, j, _ in items]
+        futs = [f for _, _, f in items]
+        try:
+            engine = jobs[0].engine
+            gap = engine.gap_code
+            counts = [int(j.Q.shape[0]) for j in jobs]
+            B = sum(counts)
+            Lq = max(int(j.Q.shape[1]) for j in jobs)
+            Lt = max(int(j.tlen) for j in jobs)
+            Q = np.full((B, Lq), gap, np.int8)
+            T = np.full((B, Lt), gap, np.int8)
+            qlens = np.zeros((B,), np.int32)
+            tlens = np.zeros((B,), np.int32)
+            off = 0
+            for j, c in zip(jobs, counts):
+                Q[off:off + c, : j.Q.shape[1]] = np.asarray(j.Q)
+                T[off:off + c, : j.tlen] = np.asarray(j.target)[: j.tlen]
+                qlens[off:off + c] = np.asarray(j.qlens)
+                tlens[off:off + c] = j.tlen
+                off += c
+
+            res = engine.align_pairs(Q, qlens, T, tlens)
+            a_rows = np.asarray(res.a_row)
+            b_rows = np.asarray(res.b_row)
+            score = np.asarray(res.score)
+            aln_len = np.asarray(res.aln_len)
+            meta = {"batch_jobs": len(jobs), "batch_pairs": B,
+                    "engine_calls": int(res.n_calls)}
+            with self._cond:
+                self._stats["batches"] += 1
+                self._stats["engine_calls"] += int(res.n_calls)
+                self._stats["fallback_pairs"] += int(res.n_fallback)
+                if len(jobs) > 1:
+                    self._stats["coalesced_jobs"] += len(jobs)
+            off = 0
+            for fut, c in zip(futs, counts):
+                fut.set_result(JobResult(score[off:off + c],
+                                         a_rows[off:off + c],
+                                         b_rows[off:off + c],
+                                         aln_len[off:off + c], meta))
+                off += c
+        except BaseException as e:                 # pragma: no cover
+            for fut in futs:
+                if not fut.done():
+                    fut.set_exception(e)

@@ -1,0 +1,408 @@
+"""MSAService: the web-service facade over align / phylo / dist / serve.
+
+The request dataflow (docs/ARCHITECTURE.md has the full map):
+
+  POST /align      FASTA/JSON -> canonicalize -> cache lookup -> on miss,
+                   center-select and submit the map(1) work to the
+                   coalescing queue (one ``align_pairs`` batch serves
+                   many concurrent requests) -> center-star assembly ->
+                   cache fill -> rows mapped back to the caller's order
+  POST /align/add  incremental insertion into a cached MSA against its
+                   frozen center (``incremental.add_to_msa``)
+  POST /tree       TreeEngine over a cached MSA (tree results memoized
+                   through the engine's cache hook) or fresh sequences
+  GET  /healthz    liveness + cache / queue stats
+
+Big requests compose with ``repro.dist``: with a mesh configured,
+families of ``dist_threshold`` or more sequences route through
+``mapreduce.msa_over_mesh`` (shard_map over the data axis) instead of
+the coalescing queue, and the TreeEngine shard-maps its distance strips
+over the same mesh.
+
+``serve_http`` wraps the facade in a stdlib ThreadingHTTPServer;
+``drain()`` refuses new work, lets in-flight requests finish, and
+flushes the queue — the graceful-shutdown path ``launch/serve_msa``
+wires to SIGINT/SIGTERM.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import json
+import threading
+import time
+from collections import OrderedDict
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core import msa as msa_mod
+from ..core.msa import MSAConfig
+from ..data import iter_fasta
+from ..data.fasta import _normalize_seq
+from ..phylo import TreeEngine
+from . import incremental
+from .cache import ResultCache, canonical_key, canonicalize
+from .queue import AlignJob, CoalescingAligner
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Server-wide alignment/tree configuration (fixed per process —
+    request payloads carry data, not scoring knobs, so one engine's jit
+    caches serve all traffic)."""
+    alphabet: str = "dna"
+    method: str = "plain"        # plain | sw | kmer (kmer runs uncoalesced)
+    backend: str = "auto"        # repro.align backend registry
+    band: int = 64
+    k: int = 11
+    center: str = "first"
+    max_batch: int = 256         # coalescing: flush at this many pairs
+    max_wait_ms: float = 5.0     # coalescing: max time a request waits
+    cache_bytes: int = 256 << 20
+    cache_items: int = 4096
+    tree_cache_items: int = 256
+    drift_threshold: float = 0.25
+    tree_backend: str = "auto"
+    cluster_threshold: int = 64
+    mesh: Optional[object] = None
+    dist_threshold: int = 512    # with a mesh: route N >= this through
+                                 # mapreduce.msa_over_mesh
+
+    def msa_cfg(self) -> MSAConfig:
+        return MSAConfig(method=self.method, alphabet=self.alphabet,
+                         k=self.k, center=self.center,
+                         gap_open=11 if self.alphabet == "protein" else 3,
+                         backend=self.backend, band=self.band)
+
+    def fingerprint(self) -> str:
+        c = self.msa_cfg()
+        return (f"{c.alphabet}/{c.method}/{c.backend}/{c.band}/{c.k}/"
+                f"{c.center}/{c.gap_open}/{c.gap_extend}")
+
+
+def parse_sequences(payload: dict) -> Tuple[List[str], List[str]]:
+    """Extract (names, sequences) from a request body.
+
+    Accepts ``{"fasta": "..."} `` (streamed through ``iter_fasta`` — the
+    text is parsed record-by-record, never re-joined) or
+    ``{"sequences": [...], "names": [...]}``. Both paths apply the same
+    normalization (uppercase, ``.``→``-``, ``\\r`` stripped, invalid
+    characters rejected) so identical data yields identical alignments
+    and cache keys regardless of payload format.
+    """
+    if "fasta" in payload:
+        names, seqs = [], []
+        for name, seq in iter_fasta(io.StringIO(payload["fasta"])):
+            names.append(name)
+            seqs.append(seq)
+    elif "sequences" in payload:
+        raw = payload["sequences"]
+        names = payload.get("names") or [f"seq{i}" for i in range(len(raw))]
+        if len(names) != len(raw):
+            raise ValueError(f"{len(names)} names for {len(raw)} sequences")
+        seqs = [_normalize_seq([s.replace("\r", "")], n)
+                for n, s in zip(names, raw)]
+    else:
+        raise ValueError("request needs 'fasta' or 'sequences'")
+    if not seqs:
+        raise ValueError("no sequences in request")
+    return names, seqs
+
+
+class MSAService:
+    """The service facade; thread-safe — HTTP handler threads call in."""
+
+    def __init__(self, cfg: ServiceConfig = ServiceConfig()):
+        self.cfg = cfg
+        self.msa_cfg = cfg.msa_cfg()
+        self.alpha = self.msa_cfg.alpha()
+        self.engine = self.msa_cfg.engine()
+        self.cache = ResultCache(max_bytes=cfg.cache_bytes,
+                                 max_items=cfg.cache_items)
+        self.coalescer = CoalescingAligner(max_batch=cfg.max_batch,
+                                           max_wait_ms=cfg.max_wait_ms)
+        self.tree_cache: OrderedDict = OrderedDict()
+        self._tree_lock = threading.Lock()
+        self._draining = False
+        self._t0 = time.time()
+
+    # ----------------------------------------------------------- helpers
+
+    def _check_open(self):
+        if self._draining:
+            raise RuntimeError("service is draining")
+
+    def _decode_rows(self, msa) -> List[str]:
+        return [self.alpha.decode(r) for r in np.asarray(msa)]
+
+    def _compute_canonical(self, canon: List[str], names: List[str]) -> dict:
+        """Align the canonical-order family; returns the cache entry."""
+        gap = self.alpha.gap_code
+        cfg = self.msa_cfg
+        mesh = self.cfg.mesh
+        meta = None
+        if mesh is not None and len(canon) >= self.cfg.dist_threshold:
+            from ..dist import mapreduce
+            res = mapreduce.msa_over_mesh(canon, cfg, mesh)
+            msa, cidx, width = res.msa, res.center_idx, res.width
+            path = "dist"
+        elif cfg.method == "kmer" or len(canon) < 2:
+            # the k-mer path needs a per-center index; it runs standalone
+            res = msa_mod.center_star_msa(canon, cfg)
+            msa, cidx, width = res.msa, res.center_idx, res.width
+            path = "standalone"
+        else:
+            S, lens = msa_mod.encode_for_msa(canon, cfg)
+            S_np, lens_np = np.asarray(S), np.asarray(lens)
+            cidx, _ = msa_mod._select_center(S, lens, cfg)
+            lc = int(lens_np[cidx])
+            others = np.array([i for i in range(len(canon)) if i != cidx])
+            job = AlignJob(Q=S_np[others], qlens=lens_np[others],
+                           target=S_np[cidx][:lc], tlen=lc,
+                           engine=self.engine,
+                           engine_key=self.cfg.fingerprint())
+            jr = self.coalescer.submit(job).result()
+            msa, width = msa_mod.assemble_center_star(
+                jr.a_row, jr.b_row, S_np[cidx][:lc], lc, others=others,
+                cidx=int(cidx), n_total=len(canon), gap=gap)
+            meta = jr.meta
+            path = "coalesced"
+        return {"msa": np.asarray(msa), "center_idx": int(cidx),
+                "width": int(width), "seqs": canon, "names": names,
+                "path": path, "coalesce": meta}
+
+    def _entry_bytes(self, entry: dict) -> int:
+        return entry["msa"].nbytes + sum(len(s) for s in entry["seqs"])
+
+    def _alignment_payload(self, msa_id: str, entry: dict,
+                           names: Optional[List[str]] = None,
+                           row_order: Optional[List[int]] = None) -> dict:
+        rows = self._decode_rows(entry["msa"])
+        if row_order is not None:
+            rows = [rows[i] for i in row_order]
+        return {"msa_id": msa_id,
+                "names": names if names is not None else entry["names"],
+                "rows": rows, "width": entry["width"],
+                "center_idx": (row_order.index(entry["center_idx"])
+                               if row_order is not None
+                               else entry["center_idx"])}
+
+    # ----------------------------------------------------------- methods
+
+    def _align_entry(self, names: List[str], seqs: List[str]
+                     ) -> Tuple[str, dict, bool, List[int]]:
+        """Shared align resolution: (key, entry, cached, perm).
+
+        Returns the entry object directly — consumers must not re-resolve
+        the key through the cache (an entry bigger than the byte budget,
+        or concurrent LRU pressure, can evict it between put and peek).
+        """
+        canon, perm = canonicalize(seqs)
+        # canon is already sorted, so the key's internal re-sort is O(n)
+        key = canonical_key(canon, self.cfg.fingerprint())
+        entry = self.cache.get(key)
+        cached = entry is not None
+        if not cached:
+            entry = self._compute_canonical(canon,
+                                            [names[i] for i in perm])
+            self.cache.put(key, entry, self._entry_bytes(entry))
+        return key, entry, cached, perm
+
+    def align(self, names: Sequence[str], seqs: Sequence[str]) -> dict:
+        self._check_open()
+        t0 = time.perf_counter()
+        names, seqs = list(names), list(seqs)
+        key, entry, cached, perm = self._align_entry(names, seqs)
+        # map canonical rows back to this request's order: canonical row i
+        # holds request sequence perm[i], so request row j is canonical
+        # row inv[j]
+        inv = [0] * len(perm)
+        for i, p in enumerate(perm):
+            inv[p] = i
+        return {"alignment": self._alignment_payload(key, entry,
+                                                     names=names,
+                                                     row_order=inv),
+                "cached": cached, "path": entry["path"],
+                "coalesce": entry["coalesce"],
+                "cache": self.cache.stats(),
+                "elapsed_ms": (time.perf_counter() - t0) * 1e3}
+
+    def align_add(self, msa_id: str, names: Sequence[str],
+                  seqs: Sequence[str]) -> dict:
+        self._check_open()
+        t0 = time.perf_counter()
+        parent = self.cache.peek(msa_id)
+        if parent is None:
+            raise KeyError(f"unknown msa_id {msa_id!r}")
+        names, seqs = list(names), list(seqs)
+        center_seq = parent["seqs"][parent["center_idx"]] \
+            if parent["center_idx"] < len(parent["seqs"]) else ""
+        key = canonical_key(parent["seqs"] + seqs, self.cfg.fingerprint(),
+                            center=center_seq)
+        entry = self.cache.get(key)
+        cached = entry is not None
+        add_info = entry["add"] if cached else None
+        if not cached:
+            res = incremental.add_to_msa(
+                parent["msa"], parent["center_idx"], seqs, self.msa_cfg,
+                drift_threshold=self.cfg.drift_threshold,
+                engine=self.engine)
+            add_info = {"n_new": res.n_new, "realigned": res.realigned,
+                        "growth": round(res.growth, 4)}
+            entry = {"msa": res.msa, "center_idx": res.center_idx,
+                     "width": res.width,
+                     "seqs": parent["seqs"] + seqs,
+                     "names": parent["names"] + names,
+                     "path": "incremental", "coalesce": None,
+                     "add": add_info}
+            self.cache.put(key, entry, self._entry_bytes(entry))
+        # on a hit, credit the caller's names for the added rows when the
+        # request's new-sequence order matches the stored suffix (a
+        # different order still hits the same canonical key; rows then
+        # keep the first filler's order and names)
+        resp_names = None
+        if cached and entry["seqs"][len(entry["seqs"]) - len(seqs):] == seqs:
+            resp_names = entry["names"][: len(entry["names"]) - len(names)] \
+                + names
+        return {"alignment": self._alignment_payload(key, entry,
+                                                     names=resp_names),
+                "cached": cached, "path": entry["path"], "add": add_info,
+                "cache": self.cache.stats(),
+                "elapsed_ms": (time.perf_counter() - t0) * 1e3}
+
+    def tree(self, msa_id: Optional[str] = None,
+             names: Optional[Sequence[str]] = None,
+             seqs: Optional[Sequence[str]] = None,
+             backend: Optional[str] = None) -> dict:
+        self._check_open()
+        t0 = time.perf_counter()
+        if msa_id is None:
+            if not seqs:
+                raise ValueError("tree request needs 'msa_id' or sequences")
+            seqs = list(seqs)
+            msa_id, entry, _, _ = self._align_entry(
+                list(names) if names else [f"seq{i}"
+                                           for i in range(len(seqs))], seqs)
+        else:
+            entry = self.cache.peek(msa_id)
+            if entry is None:
+                raise KeyError(f"unknown msa_id {msa_id!r}")
+        be = backend or self.cfg.tree_backend
+        engine = TreeEngine(gap_code=self.alpha.gap_code,
+                            n_chars=self.alpha.n_chars,
+                            correct=self.cfg.alphabet != "protein",
+                            backend=be,
+                            cluster_threshold=self.cfg.cluster_threshold,
+                            mesh=self.cfg.mesh)
+        tkey = f"{msa_id}/{be}"
+        # tree_cache is shared across handler threads: the lock covers the
+        # hit check, the build, and the LRU bound. Holding it through the
+        # build serializes tree construction, which the single device
+        # serializes anyway (same reasoning as the coalescer's one worker).
+        with self._tree_lock:
+            cached_tree = tkey in self.tree_cache
+            result = engine.build(entry["msa"], cache=self.tree_cache,
+                                  cache_key=tkey)
+            self.tree_cache.move_to_end(tkey)
+            while len(self.tree_cache) > self.cfg.tree_cache_items:
+                self.tree_cache.popitem(last=False)
+        return {"msa_id": msa_id, "newick": result.newick(entry["names"]),
+                "backend": result.backend, "requested_backend": be,
+                "n_leaves": result.n_leaves, "cached_tree": cached_tree,
+                "cache": self.cache.stats(),
+                "elapsed_ms": (time.perf_counter() - t0) * 1e3}
+
+    def healthz(self) -> dict:
+        return {"status": "draining" if self._draining else "ok",
+                "uptime_s": round(time.time() - self._t0, 3),
+                "alphabet": self.cfg.alphabet, "method": self.cfg.method,
+                "backend": self.engine.backend,
+                "cache": self.cache.stats(),
+                "queue": self.coalescer.stats()}
+
+    def drain(self):
+        """Refuse new work, finish everything in flight, flush the queue."""
+        self._draining = True
+        self.coalescer.close()
+
+
+# ------------------------------------------------------------- HTTP layer
+
+class _Handler(BaseHTTPRequestHandler):
+    protocol_version = "HTTP/1.1"
+
+    def log_message(self, fmt, *args):            # stay quiet under test
+        if getattr(self.server, "verbose", False):
+            super().log_message(fmt, *args)
+
+    def _send(self, code: int, obj: dict):
+        data = json.dumps(obj).encode()
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(data)))
+        self.end_headers()
+        self.wfile.write(data)
+
+    def _payload(self) -> dict:
+        n = int(self.headers.get("Content-Length", 0) or 0)
+        body = self.rfile.read(n) if n else b""
+        return json.loads(body or b"{}")
+
+    def do_GET(self):
+        if self.path == "/healthz":
+            self._send(200, self.server.service.healthz())
+        else:
+            self._send(404, {"error": f"unknown path {self.path}"})
+
+    def do_POST(self):
+        svc: MSAService = self.server.service
+        try:
+            payload = self._payload()
+            if self.path == "/align":
+                names, seqs = parse_sequences(payload)
+                self._send(200, svc.align(names, seqs))
+            elif self.path == "/align/add":
+                if "msa_id" not in payload:
+                    raise ValueError("align/add needs 'msa_id'")
+                names, seqs = parse_sequences(payload)
+                self._send(200, svc.align_add(payload["msa_id"], names,
+                                              seqs))
+            elif self.path == "/tree":
+                if "msa_id" in payload:
+                    self._send(200, svc.tree(
+                        msa_id=payload["msa_id"],
+                        backend=payload.get("backend")))
+                else:
+                    names, seqs = parse_sequences(payload)
+                    self._send(200, svc.tree(
+                        names=names, seqs=seqs,
+                        backend=payload.get("backend")))
+            else:
+                self._send(404, {"error": f"unknown path {self.path}"})
+        except KeyError as e:
+            self._send(404, {"error": str(e)})
+        except (ValueError, json.JSONDecodeError) as e:
+            self._send(400, {"error": str(e)})
+        except RuntimeError as e:
+            self._send(503, {"error": str(e)})
+
+
+class MSAHTTPServer(ThreadingHTTPServer):
+    # non-daemon handler threads + block_on_close: server_close() waits
+    # for in-flight requests — the graceful half of drain-on-shutdown
+    daemon_threads = False
+    block_on_close = True
+    service: MSAService
+    verbose: bool = False
+
+
+def serve_http(service: MSAService, host: str = "127.0.0.1",
+               port: int = 8642, verbose: bool = False) -> MSAHTTPServer:
+    """Bind the HTTP front end; caller runs ``serve_forever()`` and on
+    shutdown calls ``shutdown(); server_close(); service.drain()``."""
+    httpd = MSAHTTPServer((host, port), _Handler)
+    httpd.service = service
+    httpd.verbose = verbose
+    return httpd

@@ -1,0 +1,74 @@
+"""FASTA robustness: CRLF, lowercase, ambiguity codes, streaming parity."""
+import io
+
+import numpy as np
+import pytest
+
+from repro.core import alphabet as ab
+from repro.data import iter_fasta, read_fasta, write_fasta
+
+CORPUS = (
+    ">ref some description\r\n"
+    "acgtacgtACGT\r\n"
+    "ggcc\r\n"
+    "\r\n"
+    ">lower\n"
+    "acgtnnacgt\n"
+    ">ambig\n"
+    "ACGTRYSWKM\n"          # IUPAC ambiguity codes beyond ACGTN
+    ">dotgap\n"
+    "AC.GT\n"
+)
+
+
+def test_crlf_and_lowercase_normalized(tmp_path):
+    p = tmp_path / "c.fa"
+    p.write_bytes(CORPUS.encode())
+    names, seqs = read_fasta(p)
+    assert names == ["ref", "lower", "ambig", "dotgap"]
+    assert seqs[0] == "ACGTACGTACGTGGCC"          # upper, \r stripped, joined
+    assert seqs[1] == "ACGTNNACGT"
+    assert seqs[2] == "ACGTRYSWKM"                # ambiguity codes preserved
+    assert seqs[3] == "AC-GT"                     # '.' gap normalized to '-'
+    assert not any("\r" in s for s in seqs)
+
+
+def test_ambiguity_codes_encode_to_unknown(tmp_path):
+    p = tmp_path / "c.fa"
+    p.write_bytes(CORPUS.encode())
+    _, seqs = read_fasta(p)
+    codes = ab.DNA.encode(seqs[2])
+    # R/Y/S/W/K/M are outside the DNA table -> unknown code (N), never a
+    # silent pass-through of raw bytes
+    assert (np.asarray(codes[4:]) == ab.DNA.unknown_code).all()
+
+
+def test_iter_fasta_streams_from_filelike():
+    recs = list(iter_fasta(io.StringIO(CORPUS)))
+    assert [n for n, _ in recs] == ["ref", "lower", "ambig", "dotgap"]
+    assert recs[0][1] == "ACGTACGTACGTGGCC"
+
+
+def test_iter_fasta_matches_read_fasta(tmp_path):
+    p = tmp_path / "c.fa"
+    p.write_bytes(CORPUS.encode())
+    names, seqs = read_fasta(p)
+    assert list(iter_fasta(p)) == list(zip(names, seqs))
+
+
+def test_sequence_before_header_rejected():
+    with pytest.raises(ValueError, match="before the first"):
+        list(iter_fasta(io.StringIO("ACGT\n>late\nACGT\n")))
+
+
+def test_invalid_character_rejected():
+    with pytest.raises(ValueError, match="invalid character"):
+        list(iter_fasta(io.StringIO(">x\nAC4GT\n")))
+
+
+def test_roundtrip_through_write(tmp_path):
+    p = tmp_path / "w.fa"
+    write_fasta(p, ["a", "b"], ["ACGT" * 50, "GG-CC"])
+    names, seqs = read_fasta(p)
+    assert names == ["a", "b"]
+    assert seqs == ["ACGT" * 50, "GG-CC"]

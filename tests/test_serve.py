@@ -1,0 +1,370 @@
+"""Executable spec of repro.serve: coalescing, cache, incremental, drain.
+
+The four service invariants from ISSUE 4:
+  * N concurrent requests merge into <= pow2-bucket-count engine calls,
+  * a cache hit returns a byte-identical alignment response,
+  * incremental add preserves previously aligned members bit-exactly
+    (equal to a full realign with the same frozen center),
+  * drain-on-shutdown completes in-flight requests, then refuses work.
+"""
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.align.bucketing import _pow2_widths, pair_bucket_plan
+from repro.core.msa import MSAConfig, center_star_msa
+from repro.serve import (AlignJob, CoalescingAligner, MSAService,
+                         ServiceConfig, add_to_msa, serve_http)
+from repro.serve.cache import ResultCache, canonical_key, canonicalize
+
+
+def _family(rng, n, length, nsub=3):
+    base = "".join(rng.choice(list("ACGT"), length))
+    out = [base]
+    for _ in range(n - 1):
+        s = list(base)
+        for _ in range(nsub):
+            s[rng.integers(0, len(s))] = "ACGT"[rng.integers(0, 4)]
+        out.append("".join(s))
+    return out
+
+
+# ------------------------------------------------------------- align_pairs
+
+def test_align_pairs_matches_broadcast_path():
+    rng = np.random.default_rng(0)
+    cfg = MSAConfig(method="plain")
+    eng = cfg.engine()
+    gap = cfg.alpha().gap_code
+    qs = [rng.integers(0, 4, n).astype(np.int8) for n in (20, 33, 70, 140)]
+    ts = [rng.integers(0, 4, n).astype(np.int8) for n in (25, 40, 60, 130)]
+    Lq, Lt = max(map(len, qs)), max(map(len, ts))
+    Q = np.full((4, Lq), gap, np.int8)
+    T = np.full((4, Lt), gap, np.int8)
+    for i, (q, t) in enumerate(zip(qs, ts)):
+        Q[i, : len(q)] = q
+        T[i, : len(t)] = t
+    qlens = np.array([len(q) for q in qs], np.int32)
+    tlens = np.array([len(t) for t in ts], np.int32)
+    res = eng.align_pairs(Q, qlens, T, tlens)
+    for i in range(4):
+        ref = eng.align_to_center(Q[i: i + 1, : len(qs[i])],
+                                  qlens[i: i + 1], ts[i], tlens[i])
+        k = int(res.aln_len[i])
+        assert float(ref.score[0]) == float(res.score[i])
+        assert np.array_equal(np.asarray(ref.a_row[0][:k]),
+                              np.asarray(res.a_row[i][:k]))
+        assert np.array_equal(np.asarray(ref.b_row[0][:k]),
+                              np.asarray(res.b_row[i][:k]))
+
+
+def test_align_pairs_banded_overflow_falls_back():
+    rng = np.random.default_rng(1)
+    cfg = MSAConfig(method="plain")
+    ref_eng = cfg.engine()
+    band_eng = MSAConfig(method="plain", backend="banded", band=4).engine()
+    # indel-heavy pair pushes the tiny band -> per-pair full-DP fallback
+    t = rng.integers(0, 4, 80).astype(np.int8)
+    q = np.concatenate([t[:10], t[40:]])
+    Q = np.full((1, 80), 5, np.int8)
+    Q[0, : q.size] = q
+    T = t[None, :]
+    ql = np.array([q.size], np.int32)
+    tl = np.array([80], np.int32)
+    res = band_eng.align_pairs(Q, ql, T, tl)
+    ref = ref_eng.align_pairs(Q, ql, T, tl)
+    assert res.n_fallback >= 1
+    assert float(res.score[0]) == float(ref.score[0])
+
+
+def test_pair_bucket_plan_bounds_shapes():
+    rng = np.random.default_rng(2)
+    qlens = rng.integers(10, 500, 300)
+    tlens = rng.integers(10, 500, 300)
+    plan = pair_bucket_plan(qlens, tlens, 500, 500)
+    assert sum(len(idx) for _, _, idx in plan) == 300
+    wq = _pow2_widths(qlens, 500, 32)
+    wt = _pow2_widths(tlens, 500, 32)
+    assert len(plan) == len(set(zip(wq.tolist(), wt.tolist())))
+    for q_w, t_w, idx in plan:
+        assert (qlens[idx] <= q_w).all() and (tlens[idx] <= t_w).all()
+
+
+# ------------------------------------------------------------- coalescing
+
+def test_coalescing_merges_requests_into_bucket_count_calls():
+    rng = np.random.default_rng(3)
+    cfg = MSAConfig(method="plain")
+    engine = cfg.engine()
+    gap = cfg.alpha().gap_code
+    co = CoalescingAligner(max_batch=10_000, max_wait_ms=100.0)
+    jobs, lens = [], []
+    for _ in range(12):
+        L = int(rng.integers(20, 250))
+        t = rng.integers(0, 4, L).astype(np.int8)
+        q = t.copy()
+        q[rng.integers(0, L, 3)] = rng.integers(0, 4, 3).astype(np.int8)
+        Q = np.full((1, L), gap, np.int8)
+        Q[0] = q
+        jobs.append(AlignJob(Q=Q, qlens=np.array([L], np.int32), target=t,
+                             tlen=L, engine=engine, engine_key="k"))
+        lens.append(L)
+    futs = [co.submit(j) for j in jobs]
+    results = [f.result(timeout=120) for f in futs]
+    stats = co.stats()
+    co.close()
+    n_buckets = len(pair_bucket_plan(np.array(lens), np.array(lens),
+                                     max(lens), max(lens)))
+    assert stats["batches"] == 1                      # one merged flush
+    assert stats["engine_calls"] <= n_buckets < 12    # << one call per req
+    assert stats["coalesced_jobs"] == 12
+    assert all(r.meta["batch_jobs"] == 12 for r in results)
+
+
+def test_coalescer_drain_completes_inflight_then_refuses():
+    cfg = MSAConfig(method="plain")
+    engine = cfg.engine()
+    gap = cfg.alpha().gap_code
+    # long max_wait: without drain these jobs would sit until the deadline
+    co = CoalescingAligner(max_batch=10_000, max_wait_ms=30_000.0)
+    Q = np.full((1, 16), gap, np.int8)
+    Q[0] = np.arange(16) % 4
+    t = (np.arange(16) % 4).astype(np.int8)
+    futs = [co.submit(AlignJob(Q=Q, qlens=np.array([16], np.int32),
+                               target=t, tlen=16, engine=engine,
+                               engine_key="k")) for _ in range(3)]
+    t0 = time.perf_counter()
+    co.close()
+    assert time.perf_counter() - t0 < 20             # not the 30s deadline
+    assert all(f.done() for f in futs)
+    for f in futs:
+        assert f.result().a_row.shape[0] == 1
+    with pytest.raises(RuntimeError, match="draining"):
+        co.submit(AlignJob(Q=Q, qlens=np.array([16], np.int32), target=t,
+                           tlen=16, engine=engine, engine_key="k"))
+
+
+# ------------------------------------------------------------------ cache
+
+def test_result_cache_lru_and_byte_budget():
+    c = ResultCache(max_bytes=100, max_items=10)
+    c.put("a", 1, 40)
+    c.put("b", 2, 40)
+    assert c.get("a") == 1                  # 'a' now most recent
+    c.put("c", 3, 40)                       # evicts 'b' (LRU)
+    assert c.get("b") is None
+    assert c.get("a") == 1 and c.get("c") == 3
+    s = c.stats()
+    assert s["evictions"] == 1 and s["bytes"] <= 100
+    assert s["hits"] == 3 and s["misses"] == 1
+
+
+def test_canonical_key_order_and_name_invariant():
+    fp = "dna/plain"
+    assert canonical_key(["AAC", "GGT"], fp) == canonical_key(
+        ["GGT", "AAC"], fp)
+    assert canonical_key(["AAC", "GGT"], fp) != canonical_key(
+        ["AAC", "GGT"], fp, center="AAC")
+    canon, perm = canonicalize(["GGT", "AAC"])
+    assert canon == ["AAC", "GGT"] and perm == [1, 0]
+
+
+# ---------------------------------------------------------------- service
+
+@pytest.fixture(scope="module")
+def service():
+    svc = MSAService(ServiceConfig(max_wait_ms=20.0))
+    yield svc
+    if not svc._draining:
+        svc.drain()
+
+
+def test_service_concurrent_aligns_coalesce_and_match_reference(service):
+    rng = np.random.default_rng(4)
+    fams = [_family(rng, 4, 100) for _ in range(5)]
+    results = [None] * len(fams)
+
+    def call(i):
+        results[i] = service.align([f"s{j}" for j in range(4)], fams[i])
+
+    before = service.coalescer.stats()["engine_calls"]
+    threads = [threading.Thread(target=call, args=(i,))
+               for i in range(len(fams))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    # every family exactly reproduces the single-host driver's MSA
+    cfg = MSAConfig(method="plain")
+    for fam, resp in zip(fams, results):
+        canon, _ = canonicalize(fam)
+        ref = center_star_msa(canon, cfg)
+        entry = service.cache.peek(resp["alignment"]["msa_id"])
+        assert np.array_equal(entry["msa"], ref.msa)
+        for s, row in zip(fam, resp["alignment"]["rows"]):
+            assert row.replace("-", "") == s
+    # 5 requests x 3 queries each: far fewer engine calls than requests
+    calls = service.coalescer.stats()["engine_calls"] - before
+    assert calls < len(fams)
+
+
+def test_service_cache_hit_is_byte_identical(service):
+    rng = np.random.default_rng(5)
+    fam = _family(rng, 4, 90)
+    names = [f"n{j}" for j in range(4)]
+    r1 = service.align(names, fam)
+    r2 = service.align(names, fam)
+    assert r1["cached"] is False and r2["cached"] is True
+    assert json.dumps(r1["alignment"]) == json.dumps(r2["alignment"])
+    # same set in another order hits the same entry, rows follow the order
+    order = [2, 0, 3, 1]
+    r3 = service.align([names[i] for i in order], [fam[i] for i in order])
+    assert r3["cached"] is True
+    assert r3["alignment"]["rows"] == [r1["alignment"]["rows"][i]
+                                       for i in order]
+
+
+def test_service_tree_and_tree_cache(service):
+    rng = np.random.default_rng(6)
+    fam = _family(rng, 5, 80)
+    resp = service.align([f"t{j}" for j in range(5)], fam)
+    mid = resp["alignment"]["msa_id"]
+    t1 = service.tree(msa_id=mid)
+    t2 = service.tree(msa_id=mid)
+    assert t1["cached_tree"] is False and t2["cached_tree"] is True
+    assert t1["newick"] == t2["newick"]
+    assert t1["newick"].count("(") == 4                  # 5 leaves
+    with pytest.raises(KeyError):
+        service.tree(msa_id="bogus")
+
+
+def test_incremental_add_bit_identical_to_full_realign(service):
+    rng = np.random.default_rng(7)
+    base = "".join(rng.choice(list("ACGT"), 120))
+    fam = [base, base[:50] + base[51:], base[:30] + "T" + base[30:]]
+    new = [base[:10] + "ACGT" + base[10:], base[3:]]     # forces new columns
+    resp = service.align(["a", "b", "c"], fam)
+    radd = service.align_add(resp["alignment"]["msa_id"], ["d", "e"], new)
+    assert radd["add"]["realigned"] is False
+    canon, _ = canonicalize(fam)
+    full = center_star_msa(canon + new, MSAConfig(method="plain"))
+    entry = service.cache.peek(radd["alignment"]["msa_id"])
+    assert entry["width"] == full.width
+    # previously aligned members reproduce the full realign bit-for-bit
+    assert np.array_equal(entry["msa"][: len(fam)], full.msa[: len(fam)])
+    assert np.array_equal(entry["msa"], full.msa)
+    with pytest.raises(KeyError):
+        service.align_add("bogus", ["x"], ["ACGT"])
+
+
+def test_incremental_drift_triggers_full_realign():
+    cfg = MSAConfig(method="plain")
+    rng = np.random.default_rng(8)
+    base = "".join(rng.choice(list("ACGT"), 80))
+    prev = center_star_msa([base, base[:40] + base[41:]], cfg)
+    new = [base[:10] + "ACGTACGTACGT" + base[10:]]
+    res = add_to_msa(prev.msa, prev.center_idx, new, cfg,
+                     drift_threshold=0.01)
+    assert res.realigned is True
+    full = center_star_msa([base, base[:40] + base[41:]] + new, cfg)
+    assert np.array_equal(res.msa, full.msa)
+
+
+def test_json_and_fasta_payloads_normalize_identically():
+    from repro.serve.service import parse_sequences
+    fasta_names, fasta_seqs = parse_sequences(
+        {"fasta": ">a\nac.gt\r\nACGT\n"})
+    json_names, json_seqs = parse_sequences(
+        {"sequences": ["ac.gt\rACGT"], "names": ["a"]})
+    assert fasta_seqs == json_seqs == ["AC-GTACGT"]
+    with pytest.raises(ValueError, match="invalid character"):
+        parse_sequences({"sequences": ["AC4GT"]})
+
+
+def test_tree_from_sequences_survives_cache_eviction():
+    # byte budget smaller than any entry: every put self-evicts, so the
+    # tree path must use the entry it just computed, not re-resolve it
+    svc = MSAService(ServiceConfig(max_wait_ms=1.0, cache_bytes=1))
+    rng = np.random.default_rng(10)
+    fam = _family(rng, 3, 60)
+    resp = svc.tree(names=["a", "b", "c"], seqs=fam)
+    assert resp["newick"].endswith(";")
+    svc.drain()
+
+
+def test_align_add_hit_credits_caller_names(service):
+    rng = np.random.default_rng(11)
+    fam = _family(rng, 3, 70)
+    new = [_family(rng, 1, 70)[0]]
+    mid = service.align(["a", "b", "c"], fam)["alignment"]["msa_id"]
+    r1 = service.align_add(mid, ["first"], new)
+    r2 = service.align_add(mid, ["second"], new)
+    assert r1["cached"] is False and r2["cached"] is True
+    assert r1["alignment"]["names"][-1] == "first"
+    assert r2["alignment"]["names"][-1] == "second"
+    assert r1["alignment"]["rows"] == r2["alignment"]["rows"]
+
+
+def test_service_drain_refuses_new_work():
+    svc = MSAService(ServiceConfig(max_wait_ms=1.0))
+    rng = np.random.default_rng(9)
+    fam = _family(rng, 3, 60)
+    svc.align(["a", "b", "c"], fam)
+    svc.drain()
+    with pytest.raises(RuntimeError, match="draining"):
+        svc.align(["a", "b", "c"], fam)
+    assert svc.healthz()["status"] == "draining"
+
+
+# ------------------------------------------------------------------- HTTP
+
+def test_http_roundtrip_and_graceful_shutdown():
+    svc = MSAService(ServiceConfig(max_wait_ms=2.0))
+    httpd = serve_http(svc, "127.0.0.1", 0)
+    port = httpd.server_address[1]
+    thread = threading.Thread(target=httpd.serve_forever, daemon=True)
+    thread.start()
+
+    def post(path, obj):
+        req = urllib.request.Request(
+            f"http://127.0.0.1:{port}{path}",
+            data=json.dumps(obj).encode(),
+            headers={"Content-Type": "application/json"})
+        try:
+            with urllib.request.urlopen(req, timeout=120) as r:
+                return r.status, json.loads(r.read())
+        except urllib.error.HTTPError as e:
+            return e.code, json.loads(e.read())
+
+    with urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/healthz", timeout=30) as r:
+        health = json.loads(r.read())
+    assert health["status"] == "ok"
+
+    fasta = ">a\nACGTACGTAAGGCC\n>b\nacgtacgaaaggcc\r\n>c\nACGTTCGTAAGGC\n"
+    st, resp = post("/align", {"fasta": fasta})
+    assert st == 200
+    rows = resp["alignment"]["rows"]
+    assert rows[1].replace("-", "") == "ACGTACGAAAGGCC"  # CRLF+lower fixed
+    mid = resp["alignment"]["msa_id"]
+
+    st, tresp = post("/tree", {"msa_id": mid})
+    assert st == 200 and tresp["newick"].endswith(";")
+
+    st, aresp = post("/align/add",
+                     {"msa_id": mid, "sequences": ["ACGTACGTAAGGC"],
+                      "names": ["d"]})
+    assert st == 200 and len(aresp["alignment"]["rows"]) == 4
+
+    assert post("/tree", {"msa_id": "nope"})[0] == 404
+    assert post("/align", {"bogus": 1})[0] == 400
+
+    httpd.shutdown()
+    httpd.server_close()          # waits for in-flight handler threads
+    svc.drain()
+    assert svc.coalescer.stats()["in_flight"] == 0
