@@ -1,0 +1,66 @@
+"""ML tree refinement: logL gain + bootstrap throughput vs the NJ baseline.
+
+The paper's Table 5 scores trees by maximum-likelihood value; these rows
+track what native refinement buys on the Φ_DNA analogue family: the
+JC69 logL of the unrefined NJ tree vs the refined tree (same data, so
+the gain is the refinement win), the BIC-selected model, and the
+nonparametric-bootstrap replicate throughput (replicates are the
+embarrassingly parallel tree-stage workload — one weighted distance
+matrix + one NJ per replicate, vmapped or mesh-sharded).
+
+``BENCH_ml.json`` rows (see docs/BENCHMARKS.md):
+  bench/ml/refine_phi_dna_nN     — engine build incl. refine; derived
+                                   logl_nj / logl_ml / gain / model / nni
+  bench/ml/bootstrap_phi_dna_nN_BK — K replicates; derived replicates/s
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import alphabet as ab
+from repro.core.msa import MSAConfig, center_star_msa
+from repro.data import phi_dna
+from repro.phylo import MLRefiner, TreeEngine
+
+from .common import emit, time_host
+
+
+def ml_matrix(smoke: bool = False):
+    """refine + bootstrap rows on the Φ_DNA analogue (BENCH_ml rows)."""
+    scales = [1] if smoke else [1, 2]
+    n_boot = 16 if smoke else 64
+    steps = 60 if smoke else 150
+    for scale in scales:
+        fam = phi_dna(scale)
+        res = center_star_msa(fam.seqs, MSAConfig(method="kmer"))
+        msa = np.asarray(res.msa)
+        n = msa.shape[0]
+        eng = TreeEngine(gap_code=ab.DNA.gap_code, n_chars=ab.DNA.n_chars,
+                         backend="dense", refine="ml", model="auto",
+                         ml_steps=steps, nni_rounds=2)
+        us, r = time_host(eng.build, msa)
+        gain = r.logl["final"] - r.logl["initial"]
+        emit(f"bench/ml/refine_phi_dna_n{n}", us,
+             f"logl_nj={r.logl['initial']:.1f};logl_ml={r.logl['final']:.1f};"
+             f"gain={gain:.2f};model={r.model}")
+
+        refiner = MLRefiner(gap_code=ab.DNA.gap_code, n_chars=ab.DNA.n_chars,
+                            seed=0)
+        refiner.bootstrap(msa, r.children, r.blen, r.root, n_boot)  # warmup
+        t0 = time.perf_counter()
+        sup = refiner.bootstrap(msa, r.children, r.blen, r.root, n_boot)
+        dt = time.perf_counter() - t0
+        finite = sup[np.isfinite(sup)]
+        emit(f"bench/ml/bootstrap_phi_dna_n{n}_B{n_boot}", dt * 1e6,
+             f"replicates_per_s={n_boot / max(dt, 1e-9):.1f};"
+             f"mean_support={finite.mean():.3f}")
+
+
+def main():
+    ml_matrix()
+
+
+if __name__ == "__main__":
+    main()

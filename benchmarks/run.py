@@ -13,10 +13,13 @@ Run the multi-pod dry-run separately: ``python -m repro.launch.dryrun --all``.
 
 ``--smoke`` runs the small backend matrices (the CI smoke step: the
 repro.align backend x method matrix plus the repro.phylo tree backend x N
-matrix); ``--json PATH`` additionally writes every emitted row as JSON and
-``--json-tree PATH`` writes just the tree rows — CI uploads
-``BENCH_msa.json`` and ``BENCH_tree.json`` as artifacts so both bench
-trajectories are tracked per commit.
+matrix); ``--json PATH`` additionally writes every emitted row as JSON,
+``--json-tree PATH`` writes just the tree rows, and ``--json-ml PATH``
+runs the ML-refinement matrix (``bench_ml``: logL gain + bootstrap
+throughput vs the NJ baseline on the Φ_DNA analogue) and writes its rows
+— CI uploads ``BENCH_msa.json``, ``BENCH_tree.json``, and
+``BENCH_ml.json`` as artifacts so every bench trajectory is tracked per
+commit (``docs/BENCHMARKS.md`` documents the artifact schema).
 """
 from __future__ import annotations
 
@@ -32,6 +35,9 @@ def main() -> None:
                     help="also write emitted rows as JSON to PATH")
     ap.add_argument("--json-tree", default=None, metavar="PATH",
                     help="also write the tree-stage rows as JSON to PATH")
+    ap.add_argument("--json-ml", default=None, metavar="PATH",
+                    help="also run the ML-refinement matrix and write its "
+                         "rows as JSON to PATH")
     args = ap.parse_args()
 
     from . import common
@@ -50,6 +56,13 @@ def main() -> None:
         tree_rows = common.ROWS[n_msa:]
         bench_scaling.main()
 
+    ml_rows = []
+    if args.json_ml:
+        from . import bench_ml
+        n_before = len(common.ROWS)
+        bench_ml.ml_matrix(smoke=args.smoke)
+        ml_rows = common.ROWS[n_before:]
+
     if args.json:
         with open(args.json, "w") as f:
             json.dump(common.ROWS, f, indent=1)
@@ -58,6 +71,10 @@ def main() -> None:
         with open(args.json_tree, "w") as f:
             json.dump(tree_rows, f, indent=1)
         print(f"# wrote {len(tree_rows)} tree rows to {args.json_tree}")
+    if args.json_ml:
+        with open(args.json_ml, "w") as f:
+            json.dump(ml_rows, f, indent=1)
+        print(f"# wrote {len(ml_rows)} ml rows to {args.json_ml}")
 
 
 if __name__ == "__main__":

@@ -1,11 +1,25 @@
-"""JC69 log-likelihood of an MSA given a tree (Felsenstein pruning).
+"""Log-likelihood of an MSA given a tree (Felsenstein pruning).
 
-The paper evaluates phylogeny quality by maximum-likelihood value; we provide
-the vectorized evaluator: partial likelihoods for all sites at once, a scan
-over internal nodes in topological order (NJ emits children-before-parents by
-construction), with per-node rescaling against underflow. Used by
-benchmarks/bench_tree.py to score NJ and HPTree trees like the paper's
-Table 5 commentary (logL ~ -2.19e7 for their DNA set).
+The paper evaluates phylogeny quality by maximum-likelihood value; this
+module provides the vectorized evaluators: partial likelihoods for all
+sites at once, a scan over internal nodes in topological order (NJ emits
+children-before-parents by construction), with per-node rescaling against
+underflow. Two entry points:
+
+* ``log_likelihood`` — the JC69 closed-form special case over raw MSA
+  columns (what ``--tree-ll`` and benchmarks/bench_tree.py report, like
+  the paper's Table 5 commentary: logL ~ -2.19e7 for their DNA set).
+* ``pruning_log_likelihood`` — the general reversible-model evaluator
+  over compressed site patterns: the model arrives pre-decomposed
+  (``repro.phylo.models``), the internal-node processing order is an
+  explicit array (so NNI candidates score under one vmap without
+  renumbering), and site-chunk checkpointing bounds reverse-mode memory.
+  This is the function ``repro.phylo.ml`` autodiffs for branch-length
+  optimization and vmaps for topology search.
+
+``compress_patterns`` collapses identical alignment columns to (pattern,
+count) pairs — logL becomes a weighted sum over unique patterns, and a
+nonparametric bootstrap replicate is just a reweighting of the counts.
 """
 from __future__ import annotations
 
@@ -13,11 +27,19 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def jc69_transition(t):
-    """4x4 JC69 transition matrix for branch length t (expected subs/site)."""
-    e = jnp.exp(-4.0 * jnp.maximum(t, 1e-8) / 3.0)
+    """4x4 JC69 transition matrix for branch length t (expected subs/site).
+
+    Exact at t == 0: ``exp(0) == 1`` makes the off-diagonal exactly zero
+    and the diagonal exactly one, so a true zero-length branch is the
+    identity (no probability leaks off the diagonal). Positivity clamps
+    live in the ML optimizer's softplus parameterization
+    (``repro.phylo.ml``), not here.
+    """
+    e = jnp.exp(-4.0 * jnp.maximum(t, 0.0) / 3.0)
     same = 0.25 + 0.75 * e
     diff = 0.25 - 0.25 * e
     return diff[..., None, None] * jnp.ones((4, 4)) + \
@@ -61,3 +83,90 @@ def log_likelihood(msa, children, blen, root, *, gap_code: int):
     parts, scales = jax.lax.fori_loop(N, M, body, (parts, scales))
     site_l = jnp.sum(0.25 * parts[root], axis=-1)
     return jnp.sum(jnp.log(jnp.maximum(site_l, 1e-30)) + scales[root])
+
+
+def compress_patterns(msa):
+    """(N, L) alignment -> ``(patterns (N, P) int8, weights (P,) f32)``.
+
+    Site-pattern compression: identical columns collapse to one pattern
+    with a multiplicity. Every downstream likelihood is a weighted sum
+    over the P unique patterns (P << L for the paper's highly similar
+    families), and a bootstrap replicate of the L sites is a multinomial
+    reweighting of ``weights`` — no column gather, no new patterns.
+    """
+    cols, counts = np.unique(np.asarray(msa).T, axis=0, return_counts=True)
+    return (np.ascontiguousarray(cols.T).astype(np.int8),
+            counts.astype(np.float32))
+
+
+def _transition_from_decomp(lam, U, sp, t):
+    """P(t) = diag(1/sp) U diag(exp(lam t)) U^T diag(sp) for one branch.
+
+    Negative t floors at 0 (identity), same convention as
+    ``jc69_transition`` — NJ emits slightly negative lengths, and exp of
+    a positive lam*|t| would put diagonal probabilities above 1.
+    """
+    inner = (U * jnp.exp(lam * jnp.maximum(t, 0.0))[None, :]) @ U.T
+    return jnp.maximum(inner * (sp[None, :] / sp[:, None]), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("site_chunk",))
+def pruning_log_likelihood(patterns, weights, children, blen, order, root,
+                           lam, U, sp, pi, *, site_chunk: int = 0):
+    """General reversible-model pruning logL over compressed site patterns.
+
+    patterns: (N, P) int8, codes 0..3 = A,C,G,T, codes >= 4 (N/gap) give
+    uninformative all-ones partials; weights: (P,) pattern multiplicities.
+    children/blen: (M, 2) tree arrays; ``order``: (M - N,) internal-node
+    processing order — any topological sort works, which is what lets NNI
+    candidates (whose swapped arrays are no longer index-sorted) score in
+    one vmapped call. The substitution model arrives eigendecomposed
+    (``repro.phylo.models.decompose``): lam/U the eigensystem of the
+    pi-symmetrized rate matrix, sp = sqrt(pi).
+
+    Differentiable in blen and the decomposition (the branch-length path
+    is ``exp(lam * t)`` — no eigh in the gradient when the model is
+    fixed). ``site_chunk > 0`` evaluates the patterns in checkpointed
+    chunks: reverse-mode saves the scan carry per internal node, so peak
+    backward memory drops from O(M^2 * P) to O(M^2 * site_chunk).
+    """
+    N, P = patterns.shape
+    M = children.shape[0]
+
+    def chunk_ll(pat, w):
+        codes = pat.astype(jnp.int32)
+        leaf = jnp.where((codes[..., None] == jnp.arange(4)) |
+                         (codes[..., None] >= 4), 1.0, 0.0)   # (N, p, 4)
+        parts0 = jnp.zeros((M,) + leaf.shape[1:], jnp.float32).at[:N].set(leaf)
+        scales0 = jnp.zeros((M, leaf.shape[1]), jnp.float32)
+
+        def step(carry, node):
+            parts, scales = carry
+            c0 = children[node, 0]
+            c1 = children[node, 1]
+            p0 = _transition_from_decomp(lam, U, sp, blen[node, 0])
+            p1 = _transition_from_decomp(lam, U, sp, blen[node, 1])
+            part = (parts[c0] @ p0.T) * (parts[c1] @ p1.T)
+            m = jnp.maximum(jnp.max(part, axis=-1, keepdims=True), 1e-30)
+            sc = scales[c0] + scales[c1] + jnp.log(m[..., 0])
+            return (parts.at[node].set(part / m),
+                    scales.at[node].set(sc)), None
+
+        (parts, scales), _ = jax.lax.scan(step, (parts0, scales0), order)
+        site_l = jnp.sum(pi * parts[root], axis=-1)
+        return jnp.sum(w * (jnp.log(jnp.maximum(site_l, 1e-30))
+                            + scales[root]))
+
+    if site_chunk <= 0 or P <= site_chunk:
+        return chunk_ll(patterns, weights)
+    pad = (-P) % site_chunk
+    # padded patterns are all-N (uninformative, site likelihood 1) with
+    # weight 0, so they contribute exactly nothing
+    pat = jnp.pad(patterns, ((0, 0), (0, pad)), constant_values=4)
+    w = jnp.pad(weights, (0, pad))
+    n_chunks = (P + pad) // site_chunk
+    pat_c = pat.reshape(N, n_chunks, site_chunk).transpose(1, 0, 2)
+    w_c = w.reshape(n_chunks, site_chunk)
+    lls = jax.lax.map(jax.checkpoint(lambda args: chunk_ll(*args)),
+                      (pat_c, w_c))
+    return jnp.sum(lls)

@@ -9,12 +9,21 @@ import numpy as np
 
 
 def to_newick(children: np.ndarray, blen: np.ndarray, root: int,
-              names: Optional[Sequence[str]] = None) -> str:
+              names: Optional[Sequence[str]] = None,
+              support: Optional[np.ndarray] = None) -> str:
     """Newick string via iterative postorder (matching ``leaf_sets``) —
     NJ can emit caterpillar-deep trees that blow Python's recursion limit
-    around ~1000 leaves."""
+    around ~1000 leaves.
+
+    ``support`` (optional, per-node) emits bootstrap support as internal
+    node labels — ``(a:0.1,b:0.2)0.97:0.3`` — for every node with a
+    finite entry (``repro.phylo.ml.split_support`` leaves leaves, the
+    root, and trivial splits NaN, the standard convention).
+    """
     children = np.asarray(children)
     blen = np.asarray(blen)
+    if support is not None:
+        support = np.asarray(support)
     frag: dict[int, str] = {}
     stack = [(int(root), False)]
     while stack:
@@ -29,7 +38,10 @@ def to_newick(children: np.ndarray, blen: np.ndarray, root: int,
         else:
             left = f"{frag.pop(int(c[0]))}:{float(blen[node, 0]):.6f}"
             right = f"{frag.pop(int(c[1]))}:{float(blen[node, 1]):.6f}"
-            frag[node] = f"({left},{right})"
+            label = ""
+            if support is not None and np.isfinite(support[node]):
+                label = f"{float(support[node]):.2f}"
+            frag[node] = f"({left},{right}){label}"
     return frag[int(root)] + ";"
 
 
@@ -53,6 +65,17 @@ def leaf_sets(children: np.ndarray, root: int, n_leaves: int):
     return memo
 
 
+def canonical_split(s: FrozenSet[int], all_leaves: FrozenSet[int]
+                    ) -> FrozenSet[int]:
+    """The canonical side of a bipartition (smaller set, sorted tiebreak).
+
+    Shared by ``bipartitions`` and the bootstrap support tally
+    (``repro.phylo.ml.split_support``) — both must canonicalize
+    identically or support lookups silently miss.
+    """
+    return min(s, all_leaves - s, key=lambda x: (len(x), sorted(x)))
+
+
 def bipartitions(children: np.ndarray, root: int, n_leaves: int) -> Set[FrozenSet[int]]:
     """Non-trivial splits of the (implicitly unrooted) tree."""
     memo = leaf_sets(children, root, n_leaves)
@@ -61,9 +84,8 @@ def bipartitions(children: np.ndarray, root: int, n_leaves: int) -> Set[FrozenSe
     for node, s in memo.items():
         if node == root:
             continue
-        side = min(s, all_leaves - s, key=lambda x: (len(x), sorted(x)))
         if 1 < len(s) < n_leaves - 1:
-            splits.add(side)
+            splits.add(canonical_split(s, all_leaves))
     return splits
 
 

@@ -24,7 +24,9 @@ Consumers: ``launch/msa_run --dist`` (batch CLI), ``repro.serve`` (the
 web service routes requests of >= ``dist_threshold`` sequences through
 ``msa_over_mesh`` and shard-maps ``/tree`` distance strips through
 ``distance_strip_over_mesh`` / ``nearest_anchor_over_mesh`` on the same
-mesh), and ``launch/dryrun`` (512-device lower+compile sweeps).
+mesh), ``repro.phylo.ml`` (ML bootstrap replicates fan out through
+``bootstrap_over_mesh``), and ``launch/dryrun`` (512-device
+lower+compile sweeps).
 """
 from __future__ import annotations
 
@@ -204,6 +206,33 @@ def nearest_anchor_over_mesh(mesh: Mesh, *, gap_code: int, n_chars: int,
 
     fn = sh.shard_map(_nearest, mesh, in_specs=(P(data_axis, None), P()),
                       out_specs=P(data_axis, None), check_vma=False)
+    return jax.jit(fn)
+
+
+def bootstrap_over_mesh(mesh: Mesh, *, gap_code: int, n_chars: int,
+                        correct: bool = True, data_axis: str = "data"):
+    """Tree-stage hook: shard ML bootstrap replicates over the mesh.
+
+    Returns jitted ``fn(patterns, W) -> (children (B, 2N-1, 2), blen)``.
+    ``W`` is the (B, P) replicate site-weight matrix sharded over
+    ``data_axis`` (pad B with ``pad_rows`` first — all-zero padding rows
+    produce saturated-distance throwaway trees that ``unpad_rows``
+    drops); ``patterns`` is the compressed site-pattern matrix,
+    replicated. Each device runs weighted-distance + vmapped NJ for its
+    replicates (``repro.phylo.ml.replicate_trees``) — embarrassingly
+    parallel, and per-replicate math is independent of the partitioning,
+    so a fixed seed is bit-reproducible across mesh shapes.
+    """
+    from ..phylo import ml as ml_mod
+
+    def _rep(patterns, W):
+        return ml_mod.replicate_trees(patterns, W, gap_code=gap_code,
+                                      n_chars=n_chars, correct=correct)
+
+    fn = sh.shard_map(_rep, mesh, in_specs=(P(), P(data_axis, None)),
+                      out_specs=(P(data_axis, None, None),
+                                 P(data_axis, None, None)),
+                      check_vma=False)
     return jax.jit(fn)
 
 

@@ -15,8 +15,11 @@ the map(1) DP primitive from the ``repro.align`` registry (``auto`` =
 Pallas kernel on TPU, jnp scan elsewhere; ``banded`` = O(n·band) memory).
 ``--tree`` picks the ``repro.phylo.TreeEngine`` backend for the phylogeny
 stage (``nj`` = dense; ``tiled`` composes with ``--dist`` by shard-mapping
-the distance strips over the same mesh); ``repro.launch.tree_run``
-rebuilds a tree from an already-aligned FASTA without redoing the MSA.
+the distance strips over the same mesh; ``ml`` = auto backend plus
+maximum-likelihood refinement — autodiff branch lengths, BIC model
+selection, vmapped NNI); ``repro.launch.tree_run`` rebuilds a tree from
+an already-aligned FASTA without redoing the MSA (and exposes the full
+``--refine``/``--model``/``--bootstrap`` surface).
 
 Flags:
   --fasta               input FASTA (required)
@@ -26,7 +29,8 @@ Flags:
                         trie-accelerated anchor chaining)
   --alphabet            dna | rna | protein (picks encoding + matrix;
                         protein uses BLOSUM62, gap_open 11)
-  --tree                nj | cluster | tiled | auto | none tree backend
+  --tree                nj | cluster | tiled | auto | ml | none tree
+                        backend (ml = auto backend + ML refinement)
   --cluster-threshold   N at or below which cluster/auto fall back to
                         dense NJ
   --tree-ll             record the tree's JC69 log-likelihood (DNA/RNA)
@@ -59,8 +63,9 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--alphabet", default="dna",
                     choices=["dna", "rna", "protein"])
     ap.add_argument("--tree", default="nj",
-                    choices=["nj", "cluster", "tiled", "auto", "none"],
-                    help="tree backend (repro.phylo registry; nj = dense)")
+                    choices=["nj", "cluster", "tiled", "auto", "ml", "none"],
+                    help="tree backend (repro.phylo registry; nj = dense; "
+                         "ml = auto backend + ML refinement)")
     ap.add_argument("--cluster-threshold", type=int, default=64,
                     help="N at or below which cluster/auto tree backends "
                          "fall back to dense NJ")
@@ -83,10 +88,14 @@ def build_parser() -> argparse.ArgumentParser:
 
 
 def main(argv=None):
-    args = build_parser().parse_args(argv)
+    parser = build_parser()
+    args = parser.parse_args(argv)
+    if args.tree == "ml" and args.alphabet == "protein":
+        parser.error("--tree ml needs a nucleotide alphabet (the 4-state "
+                     "likelihood); use --tree cluster/tiled for protein")
 
     from ..core import alphabet as ab
-    from ..core import likelihood, sp_score, treeio
+    from ..core import likelihood, sp_score
     from ..core.msa import MSAConfig, center_star_msa, decode_msa
     from ..data import read_fasta, write_fasta
 
@@ -126,18 +135,22 @@ def main(argv=None):
     if args.tree != "none":
         from ..phylo import TreeEngine
         t0 = time.time()
+        backend = {"nj": "dense", "ml": "auto"}.get(args.tree, args.tree)
         engine = TreeEngine(gap_code=alpha.gap_code, n_chars=alpha.n_chars,
                             correct=args.alphabet != "protein",
-                            backend="dense" if args.tree == "nj" else args.tree,
+                            backend=backend,
                             cluster_threshold=args.cluster_threshold,
-                            mesh=mesh)
+                            mesh=mesh,
+                            refine="ml" if args.tree == "ml" else "none")
         tree_res = engine.build(res.msa)
         report["tree_seconds"] = time.time() - t0
         report["tree_backend"] = tree_res.backend
+        if tree_res.logl is not None:
+            report["tree_model"] = tree_res.model
+            report["tree_logl"] = tree_res.logl
         if tree_res.tile_stats is not None:
             report["tile_stats"] = tree_res.tile_stats
-        nwk = treeio.to_newick(tree_res.children, tree_res.blen,
-                               tree_res.root, names)
+        nwk = tree_res.newick(names)
         (out / "tree.nwk").write_text(nwk + "\n")
         if args.tree_ll and args.alphabet != "protein":
             report["log_likelihood"] = float(likelihood.log_likelihood(

@@ -25,6 +25,12 @@ Flags:
   --drift-threshold     /align/add width growth past which a full realign
                         replaces the incremental merge
   --tree-backend        repro.phylo registry default for /tree
+  --tree-refine         none | ml default /tree refinement (requests can
+                        override per call with {"refine": "ml"})
+  --tree-model          substitution model for refine=ml (auto = BIC)
+  --tree-bootstrap      default bootstrap replicate count for refine=ml
+  --tree-seed           default bootstrap/ML seed (part of the tree
+                        cache fingerprint)
   --cluster-threshold   N at or below which cluster/auto trees go dense
   --dist/--mesh         shard requests of >= --dist-threshold sequences
                         over the mesh (repro.dist.mapreduce) and shard-map
@@ -72,6 +78,19 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--tree-backend", default="auto",
                     choices=["auto", "dense", "tiled", "cluster"],
                     help="default /tree backend (repro.phylo registry)")
+    ap.add_argument("--tree-refine", default="none",
+                    choices=["none", "ml"],
+                    help="default /tree refinement (requests can override "
+                         "with {'refine': 'ml'})")
+    ap.add_argument("--tree-model", default="auto",
+                    choices=["auto", "jc69", "k80", "hky85", "gtr"],
+                    help="substitution model for refine=ml (auto = BIC)")
+    ap.add_argument("--tree-bootstrap", type=int, default=0,
+                    help="default bootstrap replicates (requires "
+                         "refine=ml; requests without it get a 400)")
+    ap.add_argument("--tree-seed", type=int, default=0,
+                    help="default bootstrap/ML seed (requests can "
+                         "override with {'seed': N})")
     ap.add_argument("--cluster-threshold", type=int, default=64,
                     help="N at or below which cluster/auto trees go dense")
     ap.add_argument("--dist", action="store_true",
@@ -88,7 +107,11 @@ def build_parser() -> argparse.ArgumentParser:
 
 
 def main(argv=None):
-    args = build_parser().parse_args(argv)
+    parser = build_parser()
+    args = parser.parse_args(argv)
+    if args.tree_bootstrap > 0 and args.tree_refine != "ml":
+        parser.error("--tree-bootstrap requires --tree-refine ml "
+                     "(otherwise every plain /tree request would 400)")
 
     from ..serve import MSAService, ServiceConfig, serve_http
 
@@ -103,6 +126,10 @@ def main(argv=None):
         cache_bytes=args.cache_mb << 20,
         drift_threshold=args.drift_threshold,
         tree_backend=args.tree_backend,
+        tree_refine=args.tree_refine,
+        tree_model=args.tree_model,
+        tree_bootstrap=args.tree_bootstrap,
+        tree_seed=args.tree_seed,
         cluster_threshold=args.cluster_threshold,
         mesh=mesh, dist_threshold=args.dist_threshold))
     httpd = serve_http(service, args.host, args.port, verbose=args.verbose)

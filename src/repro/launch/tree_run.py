@@ -5,11 +5,13 @@ The second half of the paper's title as its own launcher: point it at the
 and it dispatches through the ``repro.phylo.TreeEngine``.
 
   PYTHONPATH=src python -m repro.launch.tree_run --fasta aligned.fasta \
-      --out tree_out/ --backend tiled [--row-block 128] [--dist --mesh 4x1]
+      --out tree_out/ --backend tiled [--row-block 128] [--dist --mesh 4x1] \
+      [--refine ml --model auto --bootstrap 100]
 
-Outputs ``tree.nwk`` and ``report.json`` (effective backend, timings, and
-for tiled backends the tile accountant's memory stats — peak resident
-distance storage vs the one-row-block-strip budget).
+Outputs ``tree.nwk`` (with per-edge bootstrap support labels when
+``--bootstrap`` ran) and ``report.json`` (effective backend, timings, for
+tiled backends the tile accountant's memory stats, and for ``--refine
+ml`` the selected model, per-model BIC, and logL before/after).
 
 Flags:
   --fasta               aligned FASTA, equal-width rows (required)
@@ -20,9 +22,19 @@ Flags:
   --row-block           tiled backend's strip height (per-host distance
                         budget = row_block * N * 4 bytes)
   --target-cluster      desired leaves per HPTree cluster
-  --seed                sketch-sampling seed
+  --seed                sketch-sampling + bootstrap seed
   --tree-ll             also score the tree by JC69 log-likelihood
-  --dist / --mesh       shard-map the distance strips over a DxM mesh
+  --refine              none | ml: maximum-likelihood refinement of the
+                        backend's tree (autodiff branch lengths +
+                        vmapped NNI; DNA/RNA only)
+  --model               substitution model for --refine ml
+                        (auto = select by BIC)
+  --bootstrap           nonparametric bootstrap replicates for per-edge
+                        support (0 = off; shards over --mesh)
+  --ml-steps            adam steps per ML fit
+  --nni-rounds          max accepted NNI rounds
+  --dist / --mesh       shard-map distance strips (and bootstrap
+                        replicates) over a DxM mesh
 """
 from __future__ import annotations
 
@@ -57,16 +69,40 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--tree-ll", action="store_true",
                     help="also score the tree by JC69 log-likelihood "
                          "(DNA/RNA only)")
+    ap.add_argument("--refine", default="none", choices=["none", "ml"],
+                    help="maximum-likelihood refinement of the backend's "
+                         "tree (repro.phylo.ml; DNA/RNA only)")
+    ap.add_argument("--model", default="auto",
+                    choices=["auto", "jc69", "k80", "hky85", "gtr"],
+                    help="substitution model for --refine ml "
+                         "(auto = select by BIC)")
+    ap.add_argument("--bootstrap", type=int, default=0,
+                    help="bootstrap replicates for per-edge support "
+                         "labels (0 = off; requires --refine ml; shards "
+                         "over --mesh)")
+    ap.add_argument("--ml-steps", type=int, default=150,
+                    help="adam steps per ML branch-length/model fit")
+    ap.add_argument("--nni-rounds", type=int, default=8,
+                    help="max accepted NNI rounds for --refine ml")
     ap.add_argument("--dist", action="store_true",
                     help="shard-map the distance strips over the mesh")
     ap.add_argument("--mesh", default=None,
-                    help="data x model for --dist, e.g. 4x1; default: all "
-                         "visible devices x 1")
+                    help="data x model mesh, e.g. 4x1 — builds the mesh "
+                         "even without --dist (sharding ML bootstrap "
+                         "replicates, and letting backend=auto pick "
+                         "tiled); with --dist alone: all visible "
+                         "devices x 1")
     return ap
 
 
 def main(argv=None):
-    args = build_parser().parse_args(argv)
+    parser = build_parser()
+    args = parser.parse_args(argv)
+    if args.bootstrap > 0 and args.refine != "ml":
+        parser.error("--bootstrap requires --refine ml")
+    if args.refine == "ml" and args.alphabet == "protein":
+        parser.error("--refine ml needs a nucleotide alphabet (the "
+                     "4-state likelihood)")
 
     from ..core import alphabet as ab
     from ..core import likelihood
@@ -83,7 +119,7 @@ def main(argv=None):
     msa = np.stack([alpha.encode_aligned(s) for s in seqs])
 
     mesh = None
-    if args.dist:
+    if args.dist or args.mesh is not None:
         from .mesh import mesh_from_arg
         mesh = mesh_from_arg(args.mesh)
 
@@ -93,7 +129,10 @@ def main(argv=None):
                         cluster_threshold=args.cluster_threshold,
                         row_block=args.row_block,
                         target_cluster=args.target_cluster,
-                        seed=args.seed, mesh=mesh)
+                        seed=args.seed, mesh=mesh,
+                        refine=args.refine, model=args.model,
+                        bootstrap=args.bootstrap, ml_steps=args.ml_steps,
+                        nni_rounds=args.nni_rounds)
     result = engine.build(msa)
 
     out = Path(args.out)
@@ -103,6 +142,20 @@ def main(argv=None):
               "backend": result.backend, "requested_backend": args.backend,
               "tree_seconds": result.timings["total_seconds"],
               "tile_stats": result.tile_stats}
+    if result.logl is not None:
+        report["refine"] = args.refine
+        report["model"] = result.model
+        report["logl"] = result.logl
+        report["bic"] = result.bic
+        report["n_nni"] = result.n_nni
+        report["refine_seconds"] = result.timings.get("refine_seconds")
+    if args.bootstrap > 0 and result.support is not None:
+        finite = result.support[np.isfinite(result.support)]
+        report["bootstrap"] = {
+            "replicates": args.bootstrap, "seed": args.seed,
+            "mean_support": round(float(finite.mean()), 4)
+            if finite.size else None,
+            "bootstrap_seconds": result.timings.get("bootstrap_seconds")}
     if args.tree_ll and args.alphabet != "protein":
         import jax.numpy as jnp
         report["log_likelihood"] = float(likelihood.log_likelihood(

@@ -3,10 +3,16 @@
 The second half of the paper's title at scale: ``tiles`` (the shard-mapped
 tiled distance-matrix engine with streaming block-reductions), ``pipeline``
 (the HPTree cluster-merge pipeline that never materializes an (N, N) — or
-even (0.1 N, 0.1 N) — matrix), and ``engine`` (the backend-dispatching
-``TreeEngine``: dense | tiled | cluster, ``auto`` resolved by N and mesh).
+even (0.1 N, 0.1 N) — matrix), ``engine`` (the backend-dispatching
+``TreeEngine``: dense | tiled | cluster, ``auto`` resolved by N and mesh),
+``models`` (the JC69/K80/HKY85/GTR substitution-model registry with
+eigendecomposed transition probabilities), and ``ml`` (the MLRefiner:
+autodiff branch lengths, vmapped NNI topology search, mesh-sharded
+nonparametric bootstrap — ``TreeEngine(refine="ml")``).
 """
-from .engine import (AUTO_TILED_N, PhyloResult, TREE_BACKENDS,  # noqa: F401
-                     TreeEngine, resolve_tree_backend)
+from .engine import (AUTO_TILED_N, PhyloResult, REFINE_MODES,  # noqa: F401
+                     TREE_BACKENDS, TreeEngine, resolve_tree_backend)
+from .ml import MLRefiner, MLResult  # noqa: F401
+from .models import MODELS  # noqa: F401
 from .pipeline import tiled_phylogeny  # noqa: F401
 from .tiles import TileAccountant, TileContext  # noqa: F401

@@ -17,8 +17,16 @@ Backends (``TREE_BACKENDS``):
   auto      dense below ``cluster_threshold``; tiled on a multi-device
             mesh or ultra-large N; cluster otherwise
 
+Any backend's tree can then be **refined** (``refine="ml"``): the
+``repro.phylo.ml`` MLRefiner optimizes branch lengths by autodiff,
+selects a substitution model by BIC (``model="auto"``), hill-climbs the
+topology with vmapped NNI, and (``bootstrap=B``) attaches nonparametric
+bootstrap support to every internal edge — replicates shard over the
+engine's mesh.
+
 ``build`` returns a uniform ``PhyloResult`` (tree arrays, the effective
-backend that ran, timings, and the tile accountant's memory stats).
+backend that ran, timings, the tile accountant's memory stats, and — for
+refined trees — the model, logL before/after, and per-node support).
 """
 from __future__ import annotations
 
@@ -36,6 +44,7 @@ from ..core import treeio
 from . import pipeline, tiles
 
 TREE_BACKENDS = ("auto", "dense", "tiled", "cluster")
+REFINE_MODES = ("none", "ml")
 
 # above this N, `auto` prefers the tiled pipeline even on one device: the
 # dense cluster path's (0.1 N)^2 sample matrix starts to dominate memory
@@ -51,9 +60,15 @@ class PhyloResult(NamedTuple):
     requested: str           # what the caller asked for
     timings: Dict[str, float]
     tile_stats: Optional[dict]   # accountant stats for tiled backends
+    logl: Optional[Dict[str, float]] = None   # {"initial", "final"} (ml)
+    model: Optional[str] = None               # fitted substitution model
+    support: Optional[np.ndarray] = None      # per-node bootstrap support
+    bic: Optional[Dict[str, float]] = None    # per-candidate-model BIC
+    n_nni: Optional[int] = None               # accepted interchanges
 
     def newick(self, names=None) -> str:
-        return treeio.to_newick(self.children, self.blen, self.root, names)
+        return treeio.to_newick(self.children, self.blen, self.root, names,
+                                support=self.support)
 
 
 def resolve_tree_backend(backend: str, *, n: int, mesh=None,
@@ -100,6 +115,11 @@ class TreeEngine:
     seed: int = 0
     mesh: Optional[object] = None
     use_kernel: Optional[bool] = None
+    refine: str = "none"             # none | ml (repro.phylo.ml)
+    model: str = "auto"              # substitution model (auto = BIC)
+    bootstrap: int = 0               # bootstrap replicates (ml only)
+    ml_steps: int = 150              # adam steps per ML fit
+    nni_rounds: int = 8              # max accepted NNI rounds
 
     def cluster_cfg(self) -> cluster_mod.ClusterConfig:
         return cluster_mod.ClusterConfig(sample_frac=self.sample_frac,
@@ -134,6 +154,19 @@ class TreeEngine:
         itself stays stateless — the caller owns the mapping's lifetime
         and eviction policy.
         """
+        # validate before the cache lookup — an invalid configuration
+        # must error even when a compatible key is already cached
+        if self.refine not in REFINE_MODES:
+            raise ValueError(f"unknown refine mode {self.refine!r}; "
+                             f"expected one of {REFINE_MODES}")
+        if self.refine == "ml" and self.n_chars > 5:
+            raise ValueError("refine='ml' needs a nucleotide alphabet "
+                             "(4-state likelihood); got n_chars="
+                             f"{self.n_chars}")
+        if self.bootstrap > 0 and self.refine != "ml":
+            raise ValueError("bootstrap support requires refine='ml' "
+                             f"(got bootstrap={self.bootstrap} with "
+                             f"refine={self.refine!r})")
         if cache is not None and cache_key is not None and cache_key in cache:
             return cache[cache_key]
         msa_np = np.asarray(msa)
@@ -172,9 +205,40 @@ class TreeEngine:
         if eff.startswith("tiled"):
             tile_stats = dict(acct.stats(),
                               row_block_bytes=self.row_block * n * 4)
+
+        logl = model = support = bic = n_nni = None
+        if self.refine == "ml":
+            from ..core import likelihood as lik
+            from .ml import MLRefiner
+            refiner = MLRefiner(gap_code=self.gap_code, n_chars=self.n_chars,
+                                correct=self.correct,
+                                model=self.model, steps=self.ml_steps,
+                                nni_rounds=self.nni_rounds, seed=self.seed,
+                                mesh=self.mesh)
+            # compress once; refine and bootstrap share the patterns
+            patterns, weights = lik.compress_patterns(msa_np)
+            t1 = time.perf_counter()
+            mlres = refiner.refine(msa_np, children, blen, root,
+                                   patterns=patterns, weights=weights)
+            children, blen, root = mlres.children, mlres.blen, mlres.root
+            logl = {"initial": mlres.logl_init, "final": mlres.logl_final}
+            model = mlres.model
+            bic = mlres.bic
+            n_nni = mlres.n_nni
+            timings["refine_seconds"] = time.perf_counter() - t1
+            if self.bootstrap > 0:
+                t1 = time.perf_counter()
+                support = refiner.bootstrap(msa_np, children, blen, root,
+                                            self.bootstrap,
+                                            patterns=patterns,
+                                            weights=weights)
+                timings["bootstrap_seconds"] = time.perf_counter() - t1
+            eff = f"{eff}+ml"
+            timings["total_seconds"] = time.perf_counter() - t0
+
         result = PhyloResult(np.asarray(children), np.asarray(blen),
                              int(root), n, eff, self.backend, timings,
-                             tile_stats)
+                             tile_stats, logl, model, support, bic, n_nni)
         if cache is not None and cache_key is not None:
             cache[cache_key] = result
         return result

@@ -1,0 +1,425 @@
+"""MLRefiner: maximum-likelihood tree refinement over the pruning scan.
+
+The paper scores phylogenies by maximum-likelihood value but can only
+*evaluate* it; this module closes the loop and improves trees natively:
+
+1. **Branch lengths by autodiff** — all 2N-2 lengths (plus the model's
+   free parameters) optimized jointly with optax/adam through
+   ``core.likelihood.pruning_log_likelihood``. Lengths live as softplus
+   of an unconstrained vector (the positivity clamp lives *here*, not in
+   the evaluator — true zero-length branches stay exact there), and the
+   fit tracks the best point of the trajectory so the result is never
+   worse than the input.
+2. **Topology by vmapped NNI** — every internal edge contributes its two
+   nearest-neighbor interchanges; all 2(N-2) candidates carry their own
+   (children, blen, order) arrays and score in one batched pruning call
+   (``order`` is what makes a swapped-but-not-renumbered tree scannable).
+   The best strictly-improving swap is applied, branch lengths refit,
+   repeat to convergence.
+3. **Bootstrap by reweighting** — site-pattern compression turns a
+   nonparametric bootstrap replicate into a multinomial reweighting of
+   the pattern counts; each replicate is a weighted JC69 distance matrix
+   plus one NJ run, vmapped over replicates (``replicate_trees``) or
+   shard-mapped over a mesh (``dist.mapreduce.bootstrap_over_mesh`` —
+   replicates are embarrassingly parallel). Support for an edge of the
+   ML tree is the fraction of replicate trees containing its
+   bipartition.
+
+Model selection (``model="auto"``) fits every registry model and picks
+the BIC minimizer; because BIC charges each extra parameter, the winner's
+logL provably dominates the fitted-JC69 logL, which itself dominates the
+input tree's — so refinement strictly improves logL whenever the input
+branch lengths were not already ML-optimal (NJ's never are).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import distance as dist_mod
+from ..core import likelihood as lik
+from ..core import nj as nj_mod
+from ..core import treeio
+from . import models
+
+
+def _inv_softplus(y):
+    # the optimizer's positivity clamp: lengths enter as softplus(raw),
+    # so the inverse floors at 1e-6 — evaluation of true zeros elsewhere
+    # stays exact (see likelihood.jc69_transition)
+    y = jnp.maximum(y, 1e-6)
+    return y + jnp.log(-jnp.expm1(-y))
+
+
+# ------------------------------------------------------------------ fitting
+
+@functools.partial(jax.jit,
+                   static_argnames=("model", "steps", "lr", "site_chunk"))
+def _fit(patterns, weights, children, order, root, blen0, params0, *,
+         model: str, steps: int, lr: float, site_chunk: int):
+    """Joint branch-length + model-parameter fit; returns the best point.
+
+    The adam trajectory starts at the input tree (step 0 evaluates it
+    exactly), and the returned (blen, params, logl) is the argmax over
+    the whole trajectory — monotone improvement by construction.
+    """
+    # deferred so `import repro.phylo` works without optax installed —
+    # only refinement itself needs the optimizer
+    import optax
+
+    M = blen0.shape[0]
+    packed0 = jnp.concatenate([_inv_softplus(blen0).reshape(-1),
+                               jnp.asarray(params0, jnp.float32)])
+
+    def nll(packed):
+        bl = jax.nn.softplus(packed[:2 * M].reshape(M, 2))
+        dec = models.decompose(model, packed[2 * M:])
+        return -lik.pruning_log_likelihood(
+            patterns, weights, children, bl, order, root,
+            dec.lam, dec.U, dec.sp, dec.pi, site_chunk=site_chunk)
+
+    opt = optax.adam(lr)
+
+    def step(carry, _):
+        p, s, best_nll, best_p = carry
+        l, g = jax.value_and_grad(nll)(p)
+        better = l < best_nll
+        best_nll = jnp.where(better, l, best_nll)
+        best_p = jnp.where(better, p, best_p)
+        u, s = opt.update(g, s)
+        return (optax.apply_updates(p, u), s, best_nll, best_p), None
+
+    carry0 = (packed0, opt.init(packed0), jnp.float32(jnp.inf), packed0)
+    (p, _, best_nll, best_p), _ = jax.lax.scan(step, carry0, None,
+                                               length=steps)
+    final_nll = nll(p)
+    better = final_nll < best_nll
+    best_nll = jnp.where(better, final_nll, best_nll)
+    best_p = jnp.where(better, p, best_p)
+    return (jax.nn.softplus(best_p[:2 * M].reshape(M, 2)), best_p[2 * M:],
+            -best_nll)
+
+
+@functools.partial(jax.jit, static_argnames=("model", "site_chunk"))
+def _score_candidates(patterns, weights, children_k, blen_k, order_k, root,
+                      params, *, model: str, site_chunk: int):
+    """logL of every NNI candidate in one vmapped pruning call."""
+    dec = models.decompose(model, params)
+
+    def one(ch, bl, od):
+        return lik.pruning_log_likelihood(
+            patterns, weights, ch, bl, od, root,
+            dec.lam, dec.U, dec.sp, dec.pi, site_chunk=site_chunk)
+
+    return jax.vmap(one)(children_k, blen_k, order_k)
+
+
+# ---------------------------------------------------------------- topology
+
+def nni_candidates(children, blen, order, n_leaves: int):
+    """All 2(N-2) nearest-neighbor interchanges around internal edges.
+
+    For each edge (p, c) with c internal — p's other child d, c's
+    children a, b — the two candidates exchange d with a and with b; the
+    moved subtree keeps its pendant branch length. Each candidate carries
+    its own processing ``order``: the current order with c moved to just
+    before p (d precedes p in any topological order, so the result is
+    again topological without renumbering a single node).
+
+    Returns stacked (K, M, 2) children/blen and (K, M-N) orders, all
+    numpy (host code — candidate construction is O(K * M) bookkeeping).
+    """
+    children = np.asarray(children)
+    blen = np.asarray(blen)
+    order = [int(n) for n in order]
+    out_ch, out_bl, out_od = [], [], []
+    for p in order:
+        for ci in range(2):
+            c = int(children[p, ci])
+            if c < n_leaves:
+                continue                      # edge must join two internals
+            d = int(children[p, 1 - ci])
+            base = [n for n in order if n != c]
+            base.insert(base.index(p), c)
+            for si in range(2):               # swap d with children[c, si]
+                ch2 = children.copy()
+                bl2 = blen.copy()
+                swapped = int(children[c, si])
+                ch2[p, 1 - ci] = swapped
+                bl2[p, 1 - ci] = blen[c, si]
+                ch2[c, si] = d
+                bl2[c, si] = blen[p, 1 - ci]
+                out_ch.append(ch2)
+                out_bl.append(bl2)
+                out_od.append(base)
+    if not out_ch:
+        return (np.zeros((0,) + children.shape, np.int32),
+                np.zeros((0,) + blen.shape, np.float32),
+                np.zeros((0, len(order)), np.int32))
+    return (np.stack(out_ch).astype(np.int32),
+            np.stack(out_bl).astype(np.float32),
+            np.asarray(out_od, np.int32))
+
+
+def renumber_topological(children, blen, root, order, n_leaves: int):
+    """Relabel internal nodes so array index order is topological again.
+
+    NNI leaves node ids in place and tracks validity through ``order``;
+    downstream consumers (``core.likelihood.log_likelihood``, treeio,
+    the engine) assume children-before-parents by index, so the final
+    tree is renumbered: internal node ``order[i]`` becomes ``N + i``.
+    """
+    children = np.asarray(children)
+    blen = np.asarray(blen)
+    new = np.arange(children.shape[0])
+    for i, node in enumerate(order):
+        new[int(node)] = n_leaves + i
+    ch2 = np.full_like(children, -1)
+    bl2 = np.zeros_like(blen)
+    for node in range(children.shape[0]):
+        if children[node, 0] >= 0:
+            ch2[new[node]] = new[children[node]]
+            bl2[new[node]] = blen[node]
+    return ch2.astype(np.int32), bl2.astype(np.float32), int(new[int(root)])
+
+
+# --------------------------------------------------------------- bootstrap
+
+@functools.partial(jax.jit, static_argnames=("n_replicates", "n_sites"))
+def replicate_weights(key, weights, *, n_replicates: int, n_sites: int):
+    """(B, P) multinomial bootstrap reweightings of the pattern counts.
+
+    Replicate b's key is ``fold_in(key, b)`` — independent of how the
+    batch is later sharded, so a fixed seed is bit-reproducible across
+    mesh shapes.
+    """
+    logits = jnp.log(jnp.maximum(jnp.asarray(weights, jnp.float32), 1e-30))
+
+    def one(b):
+        idx = jax.random.categorical(jax.random.fold_in(key, b), logits,
+                                     shape=(n_sites,))
+        return jnp.zeros(weights.shape[0], jnp.float32).at[idx].add(1.0)
+
+    return jax.vmap(one)(jnp.arange(n_replicates))
+
+
+def weighted_distance_matrix(patterns, w, *, gap_code: int, n_chars: int,
+                             correct: bool = True):
+    """JC69 distance matrix under per-pattern weights.
+
+    With unit weights this reproduces ``core.distance.distance_matrix``
+    exactly (counts are integers in f32); under bootstrap weights the
+    match/valid counts become weighted sums — still exact integers.
+    """
+    codes = patterns.astype(jnp.int32)
+    valid = ((codes != gap_code) & (codes < n_chars))
+    oh = ((codes[:, :, None] == jnp.arange(n_chars)) &
+          valid[:, :, None]).astype(jnp.float32)            # (N, P, C)
+    a = (oh * w[None, :, None]).reshape(oh.shape[0], -1)
+    match = a @ oh.reshape(oh.shape[0], -1).T
+    vf = valid.astype(jnp.float32)
+    valid_ct = (vf * w[None, :]) @ vf.T
+    d = dist_mod.counts_to_distance(match, valid_ct, correct=correct)
+    d = 0.5 * (d + d.T)
+    return d * (1.0 - jnp.eye(d.shape[0]))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("gap_code", "n_chars", "correct"))
+def replicate_trees(patterns, W, *, gap_code: int, n_chars: int,
+                    correct: bool = True):
+    """One NJ tree per bootstrap reweighting: (B, 2N-1, 2) children/blen.
+
+    The per-replicate unit (weighted distances + one NJ) is what
+    ``dist.mapreduce.bootstrap_over_mesh`` shard-maps over the data axis.
+    """
+    n = patterns.shape[0]
+
+    def one(w):
+        D = weighted_distance_matrix(patterns, w, gap_code=gap_code,
+                                     n_chars=n_chars, correct=correct)
+        t = nj_mod.neighbor_joining(D, n)
+        return t.children, t.blen
+
+    return jax.vmap(one)(W)
+
+
+def split_support(children, root, n_leaves: int, rep_children) -> np.ndarray:
+    """Per-node bootstrap support for the final tree's internal edges.
+
+    support[node] = fraction of replicate trees whose bipartition set
+    contains the split induced by the edge above ``node``; NaN for
+    leaves, the root, and trivial splits (those have no support notion).
+    """
+    from collections import Counter
+
+    children = np.asarray(children)
+    rep_children = np.asarray(rep_children)
+    B = rep_children.shape[0]
+    tally: Counter = Counter()
+    rep_root = 2 * n_leaves - 2
+    for b in range(B):
+        tally.update(treeio.bipartitions(rep_children[b], rep_root, n_leaves))
+    ml_sets = treeio.leaf_sets(children, int(root), n_leaves)
+    all_leaves = frozenset(range(n_leaves))
+    support = np.full(children.shape[0], np.nan, np.float32)
+    for node, s in ml_sets.items():
+        if node == int(root) or children[node][0] < 0:
+            continue
+        if not (1 < len(s) < n_leaves - 1):
+            continue
+        support[node] = tally[treeio.canonical_split(s, all_leaves)] / B
+    return support
+
+
+# ---------------------------------------------------------------- refiner
+
+class MLResult(NamedTuple):
+    children: np.ndarray      # (2N-1, 2) int32, index-topological again
+    blen: np.ndarray          # (2N-1, 2) float32 optimized lengths
+    root: int
+    model: str                # the fitted (or BIC-selected) model
+    params: np.ndarray        # its unconstrained parameter vector
+    logl_init: float          # input tree under JC69 (what --tree-ll sees)
+    logl_final: float         # refined tree under the selected model
+    bic: Dict[str, float]     # per-candidate-model BIC (1 entry unless auto)
+    n_nni: int                # accepted interchanges
+
+
+@dataclasses.dataclass(frozen=True)
+class MLRefiner:
+    """Configured ML refinement; nucleotide alignments only (4 states)."""
+
+    gap_code: int
+    n_chars: int = 5             # distance-alphabet size (bootstrap NJ)
+    correct: bool = True         # JC69 distance correction (bootstrap NJ)
+    model: str = "auto"          # auto = BIC over the registry
+    steps: int = 150             # adam steps per fit
+    lr: float = 0.05
+    nni_rounds: int = 8          # max accepted-interchange rounds
+    min_gain: float = 1e-2       # logL gain an NNI must clear
+    site_chunk: int = 2048       # checkpoint granularity (0 = off)
+    seed: int = 0
+    mesh: Optional[object] = None
+
+    def __post_init__(self):
+        if self.model != "auto":
+            models.validate(self.model)
+
+    # ------------------------------------------------------------- refine
+
+    def refine(self, msa, children, blen, root, *,
+               patterns=None, weights=None) -> MLResult:
+        """Optimize branch lengths + model, hill-climb topology by NNI.
+
+        ``children``/``blen`` must be index-topological (every tree the
+        engine's backends emit is); the result is renumbered back to that
+        convention. ``patterns``/``weights`` accept a precomputed
+        ``compress_patterns(msa)`` so refine + bootstrap of the same
+        alignment compress once (the engine does this).
+        """
+        msa = np.asarray(msa)
+        n = msa.shape[0]
+        patterns_np, weights_np = (patterns, weights) \
+            if patterns is not None else lik.compress_patterns(msa)
+        patterns = jnp.asarray(patterns_np)
+        weights = jnp.asarray(weights_np)
+        n_sites = float(weights_np.sum())
+        children = np.asarray(children, np.int32)
+        # NJ emits slightly negative lengths; evaluate (and start the
+        # fit) from the zero-floored tree, matching the core evaluator
+        blen = np.maximum(np.asarray(blen, np.float32), 0.0)
+        root = int(root)
+        M = children.shape[0]
+        order = np.arange(n, M, dtype=np.int32)
+
+        dec0 = models.decompose("jc69", np.zeros(0, np.float32))
+        logl_init = float(lik.pruning_log_likelihood(
+            patterns, weights, jnp.asarray(children), jnp.asarray(blen),
+            jnp.asarray(order), root, dec0.lam, dec0.U, dec0.sp, dec0.pi,
+            site_chunk=self.site_chunk))
+
+        freqs = models.empirical_freqs(patterns_np, weights_np)
+        candidates = models.MODELS if self.model == "auto" else (self.model,)
+        fits, bics = {}, {}
+        for m in candidates:
+            bl_m, pr_m, ll_m = _fit(
+                patterns, weights, jnp.asarray(children), jnp.asarray(order),
+                root, jnp.asarray(blen), models.init_params(m, freqs),
+                model=m, steps=self.steps, lr=self.lr,
+                site_chunk=self.site_chunk)
+            fits[m] = (np.asarray(bl_m), np.asarray(pr_m), float(ll_m))
+            bics[m] = models.bic(float(ll_m), m, 2 * n - 2, n_sites)
+        model = min(bics, key=bics.get)
+        blen, params, logl = fits[model]
+
+        n_nni = 0
+        for _ in range(self.nni_rounds):
+            ch_k, bl_k, od_k = nni_candidates(children, blen, order, n)
+            if ch_k.shape[0] == 0:
+                break
+            lls = np.asarray(_score_candidates(
+                patterns, weights, jnp.asarray(ch_k), jnp.asarray(bl_k),
+                jnp.asarray(od_k), root, jnp.asarray(params),
+                model=model, site_chunk=self.site_chunk))
+            best = int(np.argmax(lls))
+            if float(lls[best]) <= logl + self.min_gain:
+                break
+            children, blen, order = ch_k[best], bl_k[best], od_k[best]
+            bl_j, pr_j, ll_j = _fit(
+                patterns, weights, jnp.asarray(children), jnp.asarray(order),
+                root, jnp.asarray(blen), jnp.asarray(params),
+                model=model, steps=self.steps, lr=self.lr,
+                site_chunk=self.site_chunk)
+            blen, params, logl = (np.asarray(bl_j), np.asarray(pr_j),
+                                  float(ll_j))
+            n_nni += 1
+
+        children, blen, root = renumber_topological(children, blen, root,
+                                                    order, n)
+        return MLResult(children, blen, root, model, np.asarray(params),
+                        logl_init, float(logl), bics, n_nni)
+
+    # ---------------------------------------------------------- bootstrap
+
+    def bootstrap(self, msa, children, blen, root, n_replicates: int, *,
+                  patterns=None, weights=None) -> np.ndarray:
+        """Nonparametric bootstrap support for the tree's internal edges.
+
+        Replicates shard over ``self.mesh`` (data axis) when one with
+        more than one device is configured; otherwise they vmap on the
+        local device. Either way replicate b's weights come from
+        ``fold_in(seed, b)``, so a fixed seed is bit-reproducible across
+        mesh shapes.
+        """
+        msa = np.asarray(msa)
+        n = msa.shape[0]
+        patterns_np, weights_np = (patterns, weights) \
+            if patterns is not None else lik.compress_patterns(msa)
+        n_sites = int(round(float(weights_np.sum())))
+        W = replicate_weights(jax.random.PRNGKey(self.seed),
+                              jnp.asarray(weights_np),
+                              n_replicates=n_replicates, n_sites=n_sites)
+        if self.mesh is not None:
+            from ..dist import mapreduce
+            from ..dist import sharding as sh
+            n_shards = sh.axis_size(self.mesh, "data")
+            W_np, b0 = mapreduce.pad_rows(np.asarray(W), n_shards)
+            fn = mapreduce.bootstrap_over_mesh(
+                self.mesh, gap_code=self.gap_code, n_chars=self.n_chars,
+                correct=self.correct)
+            ch_b, _ = fn(sh.broadcast(jnp.asarray(patterns_np), self.mesh),
+                         sh.shard_rows(W_np, self.mesh, "data"))
+            ch_b = mapreduce.unpad_rows(np.asarray(ch_b), b0)
+        else:
+            ch_b, _ = replicate_trees(jnp.asarray(patterns_np), W,
+                                      gap_code=self.gap_code,
+                                      n_chars=self.n_chars,
+                                      correct=self.correct)
+            ch_b = np.asarray(ch_b)
+        return split_support(children, root, n, ch_b)

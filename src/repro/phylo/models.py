@@ -1,0 +1,174 @@
+"""Substitution-model registry: JC69 / K80 / HKY85 / GTR as one family.
+
+Every model is a point in the general-time-reversible family: a symmetric
+exchangeability matrix R (6 pairwise rates over A,C,G,T) and a stationary
+distribution pi, composed as ``Q_ij = R_ij * pi_j`` with the diagonal set
+so rows sum to zero and the whole matrix scaled to one expected
+substitution per unit branch length. Transition probabilities come from
+the eigendecomposition of the pi-symmetrized rate matrix
+``S = diag(sqrt(pi)) Q diag(1/sqrt(pi))`` (symmetric for any reversible
+Q), replacing the closed-form ``jc69_transition`` special case:
+
+    P(t) = diag(1/sqrt(pi)) U exp(Lambda t) U^T diag(sqrt(pi))
+
+| model | free params | constraints                                   |
+|-------|-------------|-----------------------------------------------|
+| jc69  | 0           | all rates equal, pi uniform                   |
+| k80   | 1 (kappa)   | transitions (A<->G, C<->T) scaled, pi uniform |
+| hky85 | 4           | kappa + free pi                               |
+| gtr   | 8           | 5 free rates (GT fixed = 1) + free pi         |
+
+The equal-frequency models (jc69, k80) share a *parameter-independent*
+eigenbasis (the purine/pyrimidine Hadamard-like basis below), so their
+decomposition is closed-form — important because their eigenvalues are
+degenerate and ``eigh``'s VJP divides by eigenvalue gaps. HKY85/GTR
+eigendecompose numerically; their eigenvalues are generically distinct
+(``init_params`` seeds pi from empirical frequencies and distinct rates,
+keeping the optimizer away from the degenerate submanifolds).
+
+Unconstrained parameter vectors (what the optimizer sees): rates and
+kappa through ``exp``, pi through a softmax with the T logit pinned to 0.
+Model selection is by BIC (``bic``): k = free model params + 2N-2 branch
+lengths, n = alignment columns (not unique patterns).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MODELS = ("jc69", "k80", "hky85", "gtr")
+
+N_FREE = {"jc69": 0, "k80": 1, "hky85": 4, "gtr": 8}
+
+# symmetric pair order of the 6 exchangeabilities over A,C,G,T = 0..3
+_PAIRS = ((0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3))
+_TRANSITIONS = (1, 4)      # AG and CT entries of _PAIRS (the kappa pairs)
+
+# shared eigenbasis of every equal-frequency model (columns: stationary
+# mode, purine-vs-pyrimidine, A-vs-G, C-vs-T) — eigenvectors of S for any
+# kappa, so jc69/k80 never touch eigh
+_EQ_BASIS = np.array([
+    [0.5,  0.5,  np.sqrt(0.5),  0.0],
+    [0.5, -0.5,  0.0,           np.sqrt(0.5)],
+    [0.5,  0.5, -np.sqrt(0.5),  0.0],
+    [0.5, -0.5,  0.0,          -np.sqrt(0.5)],
+], np.float32)
+
+
+class Decomposition(NamedTuple):
+    """Eigendecomposed reversible model, ready for ``P(t)`` evaluation
+    (the evaluator lives in ``core.likelihood``, which consumes lam/U/sp
+    directly — core must not depend on this package)."""
+    lam: jnp.ndarray     # (4,) eigenvalues of the symmetrized rate matrix
+    U: jnp.ndarray       # (4, 4) orthonormal eigenvectors (columns)
+    sp: jnp.ndarray      # (4,) sqrt(pi)
+    pi: jnp.ndarray      # (4,) stationary distribution
+
+
+def validate(model: str) -> str:
+    if model not in MODELS:
+        raise ValueError(f"unknown substitution model {model!r}; "
+                         f"expected one of {MODELS}")
+    return model
+
+
+def empirical_freqs(patterns, weights) -> np.ndarray:
+    """Weighted A,C,G,T frequencies of an alignment (gaps/N excluded).
+
+    Pseudocounts plus a tiny deterministic tilt keep the result off the
+    exactly-uniform point, where HKY85's eigenvalues degenerate.
+    """
+    patterns = np.asarray(patterns)
+    weights = np.asarray(weights, np.float64)
+    counts = np.zeros(4)
+    for c in range(4):
+        counts[c] = ((patterns == c) * weights[None, :]).sum()
+    counts += 1.0 + 1e-3 * np.arange(4)
+    return (counts / counts.sum()).astype(np.float32)
+
+
+def init_params(model: str, freqs: Optional[np.ndarray] = None) -> np.ndarray:
+    """Unconstrained starting point for the optimizer (f32 numpy).
+
+    kappa starts at 2 (the transition bias virtually all DNA shows), GTR
+    rates at distinct transition-biased values, pi logits at the
+    empirical frequencies when given.
+    """
+    validate(model)
+    if freqs is None:
+        freqs = np.array([0.27, 0.23, 0.24, 0.26], np.float32)
+    logits = np.log(np.maximum(freqs[:3], 1e-6) / max(float(freqs[3]), 1e-6))
+    if model == "jc69":
+        return np.zeros(0, np.float32)
+    if model == "k80":
+        return np.array([np.log(2.0)], np.float32)
+    if model == "hky85":
+        return np.concatenate([[np.log(2.0)], logits]).astype(np.float32)
+    rates = np.log([1.1, 2.0, 0.9, 1.05, 2.1])     # AC AG AT CG CT (GT = 1)
+    return np.concatenate([rates, logits]).astype(np.float32)
+
+
+def unpack(model: str, params):
+    """Unconstrained params -> (rates (6,), pi (4,)) in model constraints."""
+    validate(model)
+    params = jnp.asarray(params, jnp.float32)
+    uniform = jnp.full(4, 0.25, jnp.float32)
+    ones = jnp.ones(6, jnp.float32)
+    if model == "jc69":
+        return ones, uniform
+    if model == "k80":
+        kappa = jnp.exp(params[0])
+        rates = ones.at[jnp.array(_TRANSITIONS)].set(kappa)
+        return rates, uniform
+    if model == "hky85":
+        kappa = jnp.exp(params[0])
+        rates = ones.at[jnp.array(_TRANSITIONS)].set(kappa)
+        pi = jax.nn.softmax(jnp.concatenate([params[1:4], jnp.zeros(1)]))
+        return rates, pi
+    rates = jnp.concatenate([jnp.exp(params[:5]), jnp.ones(1)])
+    pi = jax.nn.softmax(jnp.concatenate([params[5:8], jnp.zeros(1)]))
+    return rates, pi
+
+
+def rate_matrix(model: str, params):
+    """(Q, pi): the normalized GTR-family rate matrix (1 sub/site/unit t)."""
+    rates, pi = unpack(model, params)
+    R = jnp.zeros((4, 4), jnp.float32)
+    for k, (i, j) in enumerate(_PAIRS):
+        R = R.at[i, j].set(rates[k]).at[j, i].set(rates[k])
+    Q = R * pi[None, :]
+    Q = Q - jnp.diag(jnp.sum(Q, axis=1))
+    mu = -jnp.sum(pi * jnp.diag(Q))
+    return Q / jnp.maximum(mu, 1e-12), pi
+
+
+def decompose(model: str, params) -> Decomposition:
+    """Eigendecompose the pi-symmetrized rate matrix.
+
+    jc69/k80 use the fixed equal-frequency eigenbasis (their eigenvalues
+    are degenerate, which would poison eigh's VJP); hky85/gtr go through
+    ``jnp.linalg.eigh`` where eigenvalues are generically distinct.
+    """
+    Q, pi = rate_matrix(model, params)
+    sp = jnp.sqrt(pi)
+    S = sp[:, None] * Q / sp[None, :]
+    S = 0.5 * (S + S.T)
+    if model in ("jc69", "k80"):
+        U = jnp.asarray(_EQ_BASIS)
+        lam = jnp.einsum("ki,kl,li->i", U, S, U)
+    else:
+        lam, U = jnp.linalg.eigh(S)
+    return Decomposition(lam, U, sp, pi)
+
+
+def bic(logl: float, model: str, n_branches: int, n_sites: float) -> float:
+    """Bayesian information criterion: k ln(n) - 2 logL (lower is better).
+
+    k counts the free substitution parameters plus every branch length;
+    n is the number of alignment columns (patterns expanded by weight).
+    """
+    k = N_FREE[validate(model)] + n_branches
+    return float(k * np.log(max(n_sites, 1.0)) - 2.0 * logl)

@@ -10,7 +10,10 @@ The request dataflow (docs/ARCHITECTURE.md has the full map):
   POST /align/add  incremental insertion into a cached MSA against its
                    frozen center (``incremental.add_to_msa``)
   POST /tree       TreeEngine over a cached MSA (tree results memoized
-                   through the engine's cache hook) or fresh sequences
+                   through the engine's cache hook) or fresh sequences;
+                   ``"refine": "ml"`` routes through the ML refiner —
+                   the cache fingerprint spans backend, refine mode,
+                   substitution model, bootstrap count, and seed
   GET  /healthz    liveness + cache / queue stats
 
 Big requests compose with ``repro.dist``: with a mesh configured,
@@ -65,6 +68,10 @@ class ServiceConfig:
     tree_cache_items: int = 256
     drift_threshold: float = 0.25
     tree_backend: str = "auto"
+    tree_refine: str = "none"    # none | ml: /tree default refinement
+    tree_model: str = "auto"     # substitution model for refine=ml
+    tree_bootstrap: int = 0      # bootstrap replicates for refine=ml
+    tree_seed: int = 0           # bootstrap / ML seed
     cluster_threshold: int = 64
     mesh: Optional[object] = None
     dist_threshold: int = 512    # with a mesh: route N >= this through
@@ -275,7 +282,11 @@ class MSAService:
     def tree(self, msa_id: Optional[str] = None,
              names: Optional[Sequence[str]] = None,
              seqs: Optional[Sequence[str]] = None,
-             backend: Optional[str] = None) -> dict:
+             backend: Optional[str] = None,
+             refine: Optional[str] = None,
+             model: Optional[str] = None,
+             bootstrap: Optional[int] = None,
+             seed: Optional[int] = None) -> dict:
         self._check_open()
         t0 = time.perf_counter()
         if msa_id is None:
@@ -290,13 +301,30 @@ class MSAService:
             if entry is None:
                 raise KeyError(f"unknown msa_id {msa_id!r}")
         be = backend or self.cfg.tree_backend
+        refine = refine or self.cfg.tree_refine
+        model = model or self.cfg.tree_model
+        if bootstrap is None:
+            # the server-wide bootstrap default only makes sense under ML
+            # refinement; a request overriding refine to "none" must not
+            # inherit it (it would 400 on bootstrap-requires-ml)
+            bootstrap = self.cfg.tree_bootstrap if refine == "ml" else 0
+        bootstrap = int(bootstrap)
+        seed = int(self.cfg.tree_seed if seed is None else seed)
         engine = TreeEngine(gap_code=self.alpha.gap_code,
                             n_chars=self.alpha.n_chars,
                             correct=self.cfg.alphabet != "protein",
                             backend=be,
                             cluster_threshold=self.cfg.cluster_threshold,
-                            mesh=self.cfg.mesh)
-        tkey = f"{msa_id}/{be}"
+                            mesh=self.cfg.mesh,
+                            refine=refine, model=model,
+                            bootstrap=bootstrap, seed=seed)
+        # the tree fingerprint spans everything that changes the result:
+        # backend, refinement mode, substitution model, replicate count,
+        # and the seed. An unrefined tree ignores model/bootstrap (those
+        # collapse out of the key — no cache fragmentation for identical
+        # results) but keeps seed: cluster/tiled sketch sampling uses it
+        tkey = f"{msa_id}/{be}/none/{seed}" if refine == "none" else \
+            f"{msa_id}/{be}/{refine}/{model}/{bootstrap}/{seed}"
         # tree_cache is shared across handler threads: the lock covers the
         # hit check, the build, and the LRU bound. Holding it through the
         # build serializes tree construction, which the single device
@@ -308,11 +336,16 @@ class MSAService:
             self.tree_cache.move_to_end(tkey)
             while len(self.tree_cache) > self.cfg.tree_cache_items:
                 self.tree_cache.popitem(last=False)
-        return {"msa_id": msa_id, "newick": result.newick(entry["names"]),
+        resp = {"msa_id": msa_id, "newick": result.newick(entry["names"]),
                 "backend": result.backend, "requested_backend": be,
+                "refine": refine,
                 "n_leaves": result.n_leaves, "cached_tree": cached_tree,
                 "cache": self.cache.stats(),
                 "elapsed_ms": (time.perf_counter() - t0) * 1e3}
+        if result.logl is not None:
+            resp["model"] = result.model
+            resp["logl"] = result.logl
+        return resp
 
     def healthz(self) -> dict:
         return {"status": "draining" if self._draining else "ok",
@@ -370,15 +403,16 @@ class _Handler(BaseHTTPRequestHandler):
                 self._send(200, svc.align_add(payload["msa_id"], names,
                                               seqs))
             elif self.path == "/tree":
+                tree_kw = {k: payload.get(k) for k in
+                           ("backend", "refine", "model", "bootstrap",
+                            "seed")}
                 if "msa_id" in payload:
-                    self._send(200, svc.tree(
-                        msa_id=payload["msa_id"],
-                        backend=payload.get("backend")))
+                    self._send(200, svc.tree(msa_id=payload["msa_id"],
+                                             **tree_kw))
                 else:
                     names, seqs = parse_sequences(payload)
-                    self._send(200, svc.tree(
-                        names=names, seqs=seqs,
-                        backend=payload.get("backend")))
+                    self._send(200, svc.tree(names=names, seqs=seqs,
+                                             **tree_kw))
             else:
                 self._send(404, {"error": f"unknown path {self.path}"})
         except KeyError as e:

@@ -33,12 +33,37 @@ def test_markdown_relative_links_resolve():
     assert not missing, f"broken relative links: {missing}"
 
 
-def test_architecture_doc_covers_the_four_subsystems():
+def test_architecture_doc_covers_the_five_subsystems():
     text = (ROOT / "docs" / "ARCHITECTURE.md").read_text()
     for subsystem in ("repro.align", "repro.dist", "repro.phylo",
-                      "repro.serve"):
+                      "repro.phylo.ml", "repro.serve"):
         assert f"`{subsystem}`" in text, f"{subsystem} missing"
     # the README points at the architecture map instead of duplicating it
     readme = (ROOT / "README.md").read_text()
     assert "docs/ARCHITECTURE.md" in readme
     assert "docs/CLI.md" in readme
+
+
+def test_every_docs_page_is_reachable_from_architecture():
+    """Docs lint: the doc set must stay a connected graph — every file in
+    docs/ has to be reachable from docs/ARCHITECTURE.md via relative
+    links, or it is an orphan nobody will find."""
+    docs = ROOT / "docs"
+    start = docs / "ARCHITECTURE.md"
+    seen = {start.resolve()}
+    frontier = [start]
+    while frontier:
+        md = frontier.pop()
+        for m in _LINK.finditer(md.read_text()):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            p = (md.parent / target).resolve()
+            if p.suffix == ".md" and p.exists() and p not in seen:
+                seen.add(p)
+                frontier.append(p)
+    orphans = [p.name for p in sorted(docs.glob("*.md"))
+               if p.resolve() not in seen]
+    assert not orphans, (
+        f"docs pages unreachable from docs/ARCHITECTURE.md: {orphans} — "
+        f"link them from the architecture map (or a page it links)")

@@ -1,0 +1,340 @@
+"""ML tree refinement: model registry vs a brute-force oracle, pruning
+invariances, NNI candidate validity, bootstrap reproducibility, and the
+engine / launcher dispatch (``refine="ml"``)."""
+import itertools
+import json
+import re
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import alphabet as ab
+from repro.core import distance, likelihood, nj, treeio
+from repro.core.msa import MSAConfig, center_star_msa, decode_msa
+from repro.data import SimConfig, phi_dna, simulate_family, write_fasta
+from repro.phylo import MLRefiner, TreeEngine, models
+from repro.phylo import ml as ml_mod
+
+GAP, NCH = ab.DNA.gap_code, ab.DNA.n_chars
+
+
+def _aligned_family(n, L=300, seed=4, sub=0.03):
+    fam = simulate_family(SimConfig(n_leaves=n, root_len=L, branch_sub=sub,
+                                    branch_indel=0.0, seed=seed))
+    S, _ = ab.encode_batch(fam.seqs, ab.DNA)
+    return fam, np.asarray(S)
+
+
+def _nj_tree(msa):
+    D = distance.distance_matrix(jnp.asarray(msa), gap_code=GAP, n_chars=NCH)
+    return nj.host_tree(nj.neighbor_joining(D, msa.shape[0]))
+
+
+def _general_ll(patterns, weights, children, blen, root, model, params,
+                order=None, site_chunk=0):
+    n = patterns.shape[0]
+    if order is None:
+        order = np.arange(n, children.shape[0], dtype=np.int32)
+    dec = models.decompose(model, params)
+    return float(likelihood.pruning_log_likelihood(
+        jnp.asarray(patterns), jnp.asarray(weights, jnp.float32),
+        jnp.asarray(children, jnp.int32), jnp.asarray(blen, jnp.float32),
+        jnp.asarray(order), int(root), dec.lam, dec.U, dec.sp, dec.pi,
+        site_chunk=site_chunk))
+
+
+# ------------------------------------------------------------ regression
+
+def test_jc69_transition_zero_length_exact_identity():
+    """t == 0 must be the exact identity — the old 1e-8 clamp silently
+    floored true zero-length branches off the diagonal."""
+    P = np.asarray(likelihood.jc69_transition(jnp.float32(0.0)))
+    assert np.array_equal(P, np.eye(4, dtype=P.dtype))
+    # positive lengths unchanged by the fix
+    P = np.asarray(likelihood.jc69_transition(jnp.float32(0.1)))
+    assert np.allclose(P.sum(1), 1.0, atol=1e-6) and (P > 0).all()
+
+
+# --------------------------------------------------- oracle + invariances
+
+def _oracle_ll(patterns, weights, children, blen, root, Q, pi):
+    """Pure-numpy likelihood summed over all internal-state histories."""
+    M = children.shape[0]
+    N = patterns.shape[0]
+    internal = [n for n in range(M) if children[n][0] >= 0]
+    w_eig, V = np.linalg.eig(np.asarray(Q, np.float64))
+    Vinv = np.linalg.inv(V)
+    P = {(n_, k): ((V * np.exp(w_eig * float(blen[n_, k]))) @ Vinv).real
+         for n_ in internal for k in (0, 1)}
+    total = 0.0
+    for s in range(patterns.shape[1]):
+        col = patterns[:, s]
+        tot = 0.0
+        for assign in itertools.product(range(4), repeat=len(internal)):
+            st = {internal[i]: assign[i] for i in range(len(internal))}
+            for leaf in range(N):
+                st[leaf] = int(col[leaf])
+            pr = float(pi[st[root]])
+            for n_ in internal:
+                for k in (0, 1):
+                    pr *= P[(n_, k)][st[n_], st[int(children[n_][k])]]
+            tot += pr
+        total += float(weights[s]) * np.log(tot)
+    return total
+
+
+@pytest.mark.parametrize("model", models.MODELS)
+def test_pruning_matches_bruteforce_oracle(model):
+    """Every registry model, every site pattern on a 4-leaf tree, checked
+    against a numpy sum-over-histories oracle (independent expm path)."""
+    rng = np.random.default_rng(7)
+    children = np.array([[-1, -1]] * 4 + [[0, 1], [2, 3], [4, 5]], np.int32)
+    blen = np.zeros((7, 2), np.float32)
+    blen[4:] = rng.uniform(0.02, 0.6, (3, 2)).astype(np.float32)
+    patterns = np.array(list(itertools.product(range(4), repeat=4)),
+                        np.int8).T                     # (4, 256): all columns
+    weights = rng.integers(1, 5, 256).astype(np.float32)
+    params = models.init_params(model)
+    params = (params + rng.normal(0, 0.3, params.shape)).astype(np.float32) \
+        if params.size else params
+    got = _general_ll(patterns, weights, children, blen, 6, model, params)
+    Q, pi = models.rate_matrix(model, params)
+    want = _oracle_ll(patterns, weights, children, blen, 6,
+                      np.asarray(Q), np.asarray(pi))
+    assert got == pytest.approx(want, rel=5e-4)
+
+
+def test_gap_columns_are_uninformative():
+    """Appending all-N / all-gap patterns (weight w) must not change logL."""
+    rng = np.random.default_rng(1)
+    children = np.array([[-1, -1]] * 4 + [[0, 1], [2, 3], [4, 5]], np.int32)
+    blen = np.abs(rng.normal(0.1, 0.05, (7, 2))).astype(np.float32)
+    pat = rng.integers(0, 4, (4, 40)).astype(np.int8)
+    w = np.ones(40, np.float32)
+    base = _general_ll(pat, w, children, blen, 6, "jc69", np.zeros(0))
+    pat2 = np.concatenate([pat, np.full((4, 3), 4, np.int8),
+                           np.full((4, 2), GAP, np.int8)], axis=1)
+    w2 = np.concatenate([w, np.full(5, 7.0, np.float32)])
+    aug = _general_ll(pat2, w2, children, blen, 6, "jc69", np.zeros(0))
+    assert aug == pytest.approx(base, abs=1e-3)
+
+
+def test_negative_branch_lengths_floor_at_identity():
+    """NJ emits slightly negative lengths; the evaluator must treat them
+    as zero (like jc69_transition), not let exp(lam*t) push diagonal
+    transition probabilities above 1 and inflate logL."""
+    fam, msa = _aligned_family(6, L=150, seed=3)
+    children, blen, root = _nj_tree(msa)
+    patterns, weights = likelihood.compress_patterns(msa)
+    neg = blen.copy()
+    neg[root, 0] = -0.2
+    ll_neg = _general_ll(patterns, weights, children, neg, root, "jc69",
+                         np.zeros(0))
+    ll_zero = _general_ll(patterns, weights, children,
+                          np.maximum(neg, 0.0), root, "jc69", np.zeros(0))
+    assert ll_neg == pytest.approx(ll_zero, rel=1e-6)
+    # refinement from a negative-length tree still strictly improves a
+    # *valid* baseline
+    res = MLRefiner(gap_code=GAP, n_chars=NCH, model="jc69", steps=60,
+                    nni_rounds=1).refine(msa, children, neg, root)
+    assert res.logl_init == pytest.approx(ll_zero, rel=1e-6)
+    assert res.logl_final > res.logl_init
+
+
+def test_site_chunk_checkpointing_parity():
+    rng = np.random.default_rng(2)
+    fam, msa = _aligned_family(6, L=200, seed=9)
+    children, blen, root = _nj_tree(msa)
+    patterns, weights = likelihood.compress_patterns(msa)
+    full = _general_ll(patterns, weights, children, blen, root, "jc69",
+                       np.zeros(0), site_chunk=0)
+    chunked = _general_ll(patterns, weights, children, blen, root, "jc69",
+                          np.zeros(0), site_chunk=7)
+    assert chunked == pytest.approx(full, rel=1e-6)
+
+
+def test_rerooting_invariance():
+    """Reversible models are root-invariant: the same unrooted quartet
+    rooted on the middle edge (any pulley split) and on a pendant edge
+    must have identical logL."""
+    rng = np.random.default_rng(5)
+    a, b, c, d, e = rng.uniform(0.05, 0.4, 5)
+    patterns = np.array(list(itertools.product(range(4), repeat=4)),
+                        np.int8).T
+    weights = rng.integers(1, 4, 256).astype(np.float32)
+    params = (models.init_params("gtr")
+              + rng.normal(0, 0.2, 8)).astype(np.float32)
+
+    def quartet(ch, bl):
+        return _general_ll(patterns, weights, np.asarray(ch, np.int32),
+                           np.asarray(bl, np.float32), 6, "gtr", params)
+
+    # rooted on the middle edge, pulley split x / e - x
+    lls = []
+    for x in (0.0, 0.37 * e, e):
+        ch = [[-1, -1]] * 4 + [[0, 1], [2, 3], [4, 5]]
+        bl = [[0, 0]] * 4 + [[a, b], [c, d], [x, e - x]]
+        lls.append(quartet(ch, bl))
+    # rooted on leaf 0's pendant edge (split a in half, e intact)
+    ch = [[-1, -1]] * 4 + [[2, 3], [1, 4], [0, 5]]
+    bl = [[0, 0]] * 4 + [[c, d], [b, e], [a / 2, a / 2]]
+    lls.append(quartet(ch, bl))
+    assert np.allclose(lls, lls[0], atol=0.05)
+
+
+# --------------------------------------------------------------- topology
+
+def test_nni_candidates_are_valid_trees():
+    fam, msa = _aligned_family(10, seed=11)
+    children, blen, root = _nj_tree(msa)
+    n = msa.shape[0]
+    order = np.arange(n, children.shape[0], dtype=np.int32)
+    ch_k, bl_k, od_k = ml_mod.nni_candidates(children, blen, order, n)
+    assert ch_k.shape[0] == 2 * (n - 2)
+    all_leaves = frozenset(range(n))
+    for k in range(ch_k.shape[0]):
+        pos = {int(v): i for i, v in enumerate(od_k[k])}
+        for node in od_k[k]:
+            for c in ch_k[k][int(node)]:
+                if int(c) >= n:                   # internal child first
+                    assert pos[int(c)] < pos[int(node)]
+        assert treeio.leaf_sets(ch_k[k], root, n)[root] == all_leaves
+
+
+def test_refiner_strictly_improves_and_renumbers():
+    fam, msa = _aligned_family(8, seed=4)
+    children, blen, root = _nj_tree(msa)
+    res = MLRefiner(gap_code=GAP, n_chars=NCH, model="jc69", steps=80,
+                    nni_rounds=2).refine(msa, children, blen, root)
+    assert res.logl_final > res.logl_init
+    # renumbered tree is index-topological again: the core JC69 evaluator
+    # (which assumes it) agrees with the refiner's own final logL
+    ll_core = float(likelihood.log_likelihood(
+        jnp.asarray(msa), jnp.asarray(res.children), jnp.asarray(res.blen),
+        res.root, gap_code=GAP))
+    assert ll_core == pytest.approx(res.logl_final, rel=1e-4)
+
+
+def test_bic_auto_selects_argmin():
+    fam, msa = _aligned_family(6, L=200, seed=8)
+    children, blen, root = _nj_tree(msa)
+    res = MLRefiner(gap_code=GAP, n_chars=NCH, model="auto", steps=40,
+                    nni_rounds=0).refine(msa, children, blen, root)
+    assert set(res.bic) == set(models.MODELS)
+    assert res.model == min(res.bic, key=res.bic.get)
+    assert all(np.isfinite(v) for v in res.bic.values())
+
+
+# -------------------------------------------------------------- bootstrap
+
+def test_weighted_distance_unit_weights_matches_dense():
+    rng = np.random.default_rng(3)
+    msa = rng.integers(0, 6, (12, 80)).astype(np.int8)   # incl. N + gaps
+    got = np.asarray(ml_mod.weighted_distance_matrix(
+        jnp.asarray(msa), jnp.ones(80, jnp.float32), gap_code=GAP,
+        n_chars=NCH))
+    want = np.asarray(distance.distance_matrix(jnp.asarray(msa),
+                                               gap_code=GAP, n_chars=NCH))
+    assert np.array_equal(got, want)
+
+
+def test_bootstrap_reproducible_and_mesh_sharded():
+    from repro.launch.mesh import make_local_mesh
+    fam, msa = _aligned_family(8, seed=4)
+    children, blen, root = _nj_tree(msa)
+    r = MLRefiner(gap_code=GAP, n_chars=NCH, seed=12)
+    s1 = r.bootstrap(msa, children, blen, root, 12)
+    s2 = r.bootstrap(msa, children, blen, root, 12)
+    assert np.array_equal(s1, s2, equal_nan=True)
+    finite = s1[np.isfinite(s1)]
+    assert finite.size > 0 and ((finite >= 0) & (finite <= 1)).all()
+    # leaves and root carry no support
+    assert not np.isfinite(s1[:8]).any() and not np.isfinite(s1[root])
+    # replicates sharded over a mesh are bit-identical for the same seed
+    r_mesh = MLRefiner(gap_code=GAP, n_chars=NCH, seed=12,
+                       mesh=make_local_mesh((1, 1)))
+    s3 = r_mesh.bootstrap(msa, children, blen, root, 12)
+    assert np.array_equal(s1, s3, equal_nan=True)
+    # a different seed resamples different site counts
+    s4 = MLRefiner(gap_code=GAP, n_chars=NCH, seed=13).bootstrap(
+        msa, children, blen, root, 12)
+    assert not np.array_equal(s1, s4, equal_nan=True)
+
+
+# ------------------------------------------------------- engine + launcher
+
+def test_engine_refine_dispatch_and_support_newick():
+    fam, msa = _aligned_family(8, seed=4)
+    eng = TreeEngine(gap_code=GAP, n_chars=NCH, refine="ml", model="jc69",
+                     bootstrap=8, ml_steps=40, nni_rounds=1)
+    res = eng.build(msa)
+    assert res.backend.endswith("+ml") and res.model == "jc69"
+    assert res.logl["final"] > res.logl["initial"]
+    assert res.support is not None
+    assert re.search(r"\)\d\.\d\d:", res.newick(fam.names))
+    assert "refine_seconds" in res.timings
+    with pytest.raises(ValueError):
+        TreeEngine(gap_code=21, n_chars=21, refine="ml").build(msa)
+    with pytest.raises(ValueError):
+        TreeEngine(gap_code=GAP, n_chars=NCH, refine="wat").build(msa)
+    # bootstrap without refinement must fail loudly, not silently drop
+    with pytest.raises(ValueError):
+        TreeEngine(gap_code=GAP, n_chars=NCH, bootstrap=8).build(msa)
+
+
+def test_service_tree_refine_fingerprint():
+    from repro.serve import MSAService, ServiceConfig
+    fam, msa = _aligned_family(6, L=120, seed=6)
+    seqs = [ab.DNA.decode(r).replace("-", "") for r in msa]
+    svc = MSAService(ServiceConfig(method="plain"))
+    r1 = svc.tree(seqs=seqs, refine="ml", model="jc69")
+    assert r1["refine"] == "ml" and r1["logl"]["final"] >= r1["logl"]["initial"]
+    r2 = svc.tree(msa_id=r1["msa_id"], refine="ml", model="jc69")
+    assert r2["cached_tree"]
+    # unrefined request misses the refined fingerprint
+    r3 = svc.tree(msa_id=r1["msa_id"])
+    assert not r3["cached_tree"] and r3["refine"] == "none"
+    # refine=none ignores the model, so it must not fragment the cache
+    # key — but seed stays in it (cluster/tiled sketch sampling uses it)
+    r4 = svc.tree(msa_id=r1["msa_id"], model="gtr")
+    assert r4["cached_tree"]
+    r5 = svc.tree(msa_id=r1["msa_id"], seed=99)
+    assert not r5["cached_tree"]
+    # invalid config errors even when a compatible key is warm in the
+    # cache (validation runs before the lookup)
+    with pytest.raises(ValueError):
+        svc.tree(msa_id=r1["msa_id"], bootstrap=10)
+    svc.drain()
+    # a server-wide bootstrap default must not leak into requests that
+    # override refine to "none" (they would 400 on bootstrap-requires-ml)
+    svc2 = MSAService(ServiceConfig(method="plain", tree_refine="ml",
+                                    tree_model="jc69", tree_bootstrap=4))
+    r6 = svc2.tree(seqs=seqs, refine="none")
+    assert r6["refine"] == "none" and "logl" not in r6
+    svc2.drain()
+
+
+def test_tree_run_refine_ml_improves_on_phi_dna(tmp_path):
+    """The acceptance run: phi_dna family -> center-star MSA ->
+    ``tree_run --refine ml --model auto --bootstrap B --mesh 1x1``
+    strictly improves logL over the unrefined NJ tree and emits
+    support-labelled Newick."""
+    from repro.launch import tree_run
+    fam = phi_dna()
+    cfg = MSAConfig(method="kmer")
+    res = center_star_msa(fam.seqs, cfg)
+    fa = tmp_path / "aligned.fasta"
+    write_fasta(fa, fam.names, decode_msa(res.msa, cfg))
+    out = tmp_path / "tree"
+    tree_run.main(["--fasta", str(fa), "--out", str(out),
+                   "--refine", "ml", "--model", "auto", "--bootstrap", "16",
+                   "--ml-steps", "60", "--nni-rounds", "2",
+                   "--mesh", "1x1", "--tree-ll"])
+    rep = json.loads((out / "report.json").read_text())
+    assert rep["logl"]["final"] > rep["logl"]["initial"]
+    assert rep["model"] in models.MODELS
+    assert rep["bootstrap"]["replicates"] == 16
+    nwk = (out / "tree.nwk").read_text()
+    assert re.search(r"\)\d\.\d\d:", nwk)
+    assert nwk.count("seq") == len(fam.seqs)
