@@ -16,9 +16,12 @@ repro.align backend x method matrix plus the repro.phylo tree backend x N
 matrix); ``--json PATH`` additionally writes every emitted row as JSON,
 ``--json-tree PATH`` writes just the tree rows, and ``--json-ml PATH``
 runs the ML-refinement matrix (``bench_ml``: logL gain + bootstrap
-throughput vs the NJ baseline on the Φ_DNA analogue) and writes its rows
-— CI uploads ``BENCH_msa.json``, ``BENCH_tree.json``, and
-``BENCH_ml.json`` as artifacts so every bench trajectory is tracked per
+throughput vs the NJ baseline on the Φ_DNA analogue) and writes its
+rows, and ``--json-search PATH`` runs the homology-search matrix
+(``bench_search``: queries/sec vs DB size, prefilter survival, top-k
+recall vs the exhaustive oracle) and writes its rows — CI uploads
+``BENCH_msa.json``, ``BENCH_tree.json``, ``BENCH_ml.json``, and
+``BENCH_search.json`` as artifacts so every bench trajectory is tracked per
 commit (``docs/BENCHMARKS.md`` documents the artifact schema).
 """
 from __future__ import annotations
@@ -38,6 +41,9 @@ def main() -> None:
     ap.add_argument("--json-ml", default=None, metavar="PATH",
                     help="also run the ML-refinement matrix and write its "
                          "rows as JSON to PATH")
+    ap.add_argument("--json-search", default=None, metavar="PATH",
+                    help="also run the homology-search matrix and write "
+                         "its rows as JSON to PATH")
     args = ap.parse_args()
 
     from . import common
@@ -63,6 +69,13 @@ def main() -> None:
         bench_ml.ml_matrix(smoke=args.smoke)
         ml_rows = common.ROWS[n_before:]
 
+    search_rows = []
+    if args.json_search:
+        from . import bench_search
+        n_before = len(common.ROWS)
+        bench_search.search_matrix(smoke=args.smoke)
+        search_rows = common.ROWS[n_before:]
+
     if args.json:
         with open(args.json, "w") as f:
             json.dump(common.ROWS, f, indent=1)
@@ -75,6 +88,11 @@ def main() -> None:
         with open(args.json_ml, "w") as f:
             json.dump(ml_rows, f, indent=1)
         print(f"# wrote {len(ml_rows)} ml rows to {args.json_ml}")
+    if args.json_search:
+        with open(args.json_search, "w") as f:
+            json.dump(search_rows, f, indent=1)
+        print(f"# wrote {len(search_rows)} search rows to "
+              f"{args.json_search}")
 
 
 if __name__ == "__main__":

@@ -29,8 +29,16 @@ class Anchors(NamedTuple):
 
 
 def kmer_codes(seq, length, k: int):
-    """Rolling base-4 codes; invalid windows (N/gap or beyond length) -> -1."""
+    """Rolling base-4 codes; invalid windows (N/gap or beyond length) -> -1.
+
+    A buffer shorter than ``k`` has no windows at all — the result is the
+    empty (0,) code array, never a negative-size slice (degenerate inputs:
+    fragments below the k-mer width, empty queries). All-ambiguous windows
+    (N / gap codes >= 4) are invalid like any other.
+    """
     n = seq.shape[0]
+    if n < k:                       # static shape: no length-k window exists
+        return jnp.full((0,), -1, jnp.int32)
     windows = jnp.stack([seq[i: n - k + 1 + i] for i in range(k)], axis=1)
     windows = windows.astype(jnp.int32)
     powers = jnp.array([4**i for i in range(k)], dtype=jnp.int32)
@@ -73,6 +81,13 @@ def chain_anchors(q, lq, table, lc, *, k: int, stride: int, max_anchors: int,
     the MSA driver then falls back to full DP for that pair.
     """
     codes = kmer_codes(q, lq, k)
+    if codes.shape[0] == 0:
+        # query buffer below the k-mer width: no windows, so no chain —
+        # the pair is still ok when the whole rectangle fits one full-DP
+        # segment (same predicate the scan's tail check would apply)
+        ok = (lq <= max_seg) & (lc <= max_seg)
+        zeros = jnp.zeros((max_anchors,), jnp.int32)
+        return Anchors(zeros, zeros, jnp.int32(0), ok)
     cand = jnp.where(codes[:, None] >= 0, table[jnp.clip(codes, 0)], EMPTY)
     t_steps = jnp.arange(0, codes.shape[0], stride)
 
@@ -99,7 +114,12 @@ def chain_anchors(q, lq, table, lc, *, k: int, stride: int, max_anchors: int,
     (q_end, c_end, cnt, aq, ac), _ = jax.lax.scan(
         step, (jnp.int32(0), jnp.int32(0), jnp.int32(0), aq0, ac0), t_steps)
     tail_ok = ((lq - q_end) <= max_seg) & ((lc - c_end) <= max_seg)
-    ok = tail_ok & (cnt > 0)
+    # cnt == 0 is still a usable chain when the whole pair fits one DP
+    # segment (short queries, fragments below the k-mer width): the
+    # assembly aligns the single [0,lq)x[0,lc) segment with full DP, which
+    # is exactly what the driver's fallback would do. Only flag fallback
+    # when zero anchors leave a segment over budget.
+    ok = tail_ok & ((cnt > 0) | ((lq <= max_seg) & (lc <= max_seg)))
     return Anchors(aq, ac, cnt, ok)
 
 

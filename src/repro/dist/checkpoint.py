@@ -25,6 +25,23 @@ _PREFIX = "step_"
 _SUFFIX = ".npz"
 
 
+def atomic_save_npz(path, arrays: dict):
+    """Crash-safe npz write: temp file in the target directory, then one
+    ``os.replace``. The durability primitive ``CheckpointManager`` builds
+    on, exported for single-artifact consumers (``repro.search`` persists
+    its ``SearchIndex`` through it so a crash mid-save never corrupts an
+    index a fleet of workers is about to load)."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tmp = path.parent / f".tmp-{uuid.uuid4().hex}"
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
+        os.replace(tmp, path)
+    finally:
+        tmp.unlink(missing_ok=True)
+
+
 class CheckpointManager:
     def __init__(self, directory, keep: Optional[int] = None,
                  async_write: bool = False):

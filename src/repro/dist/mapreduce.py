@@ -236,6 +236,38 @@ def bootstrap_over_mesh(mesh: Mesh, *, gap_code: int, n_chars: int,
     return jax.jit(fn)
 
 
+def search_over_mesh(mesh: Mesh, *, k: int, stride: int = 1,
+                     max_anchors: int = 32, max_seg: int = 1 << 20,
+                     data_axis: str = "data"):
+    """Search-stage hook: jitted seeding prefilter over a sharded DB.
+
+    Returns ``fn(Q, qlens, dblens, tables) -> (B, D) anchor counts``.
+    The per-sequence k-mer tables (not the rows — seeding only probes
+    tables) are sharded over ``data_axis`` (place with
+    ``sharding.shard_rows``; pad D with ``pad_rows`` first), the query
+    batch is replicated — each device chains anchors for every
+    (query, local DB row) pair and the count matrix comes back
+    concatenated over the DB dim (out spec ``P(None, data_axis)``). Counts are per-pair integers independent of
+    the partitioning, so results are bit-identical across mesh shapes —
+    the invariant ``repro.search`` builds its mesh/host equivalence on.
+    The candidate *rescoring* stays a host concern: the surviving pair
+    set re-enters ``AlignEngine.align_pairs`` (pow2-bucketed), identical
+    on every mesh because the surviving set is.
+    """
+    from ..search.engine import seed_counts_batch
+
+    def _seed(Q, qlens, dblens, tables):
+        return seed_counts_batch(Q, qlens, dblens, tables, k=k,
+                                 stride=stride, max_anchors=max_anchors,
+                                 max_seg=max_seg)
+
+    fn = sh.shard_map(_seed, mesh,
+                      in_specs=(P(), P(), P(data_axis),
+                                P(data_axis, None, None)),
+                      out_specs=P(None, data_axis), check_vma=False)
+    return jax.jit(fn)
+
+
 def center_row(center, lc, G, *, gap_code: int, out_len: int):
     """The broadcast center's own row in the merged frame (host-side wrap)."""
     return centerstar.center_msa_row(center, lc, G, gap_code=gap_code,

@@ -15,6 +15,7 @@ from pathlib import Path
 CLIS = [
     "repro.launch.msa_run",
     "repro.launch.tree_run",
+    "repro.launch.search_run",
     "repro.launch.serve_msa",
     "repro.launch.serve",
     "repro.launch.train",

@@ -10,6 +10,8 @@ Serves ``repro.serve.MSAService`` over stdlib HTTP/JSON:
   POST /align/add  {"msa_id": ..., "fasta"/"sequences": ...} ->
                    incremental insertion against the frozen center
   POST /tree       {"msa_id": ...} or sequences -> Newick
+  POST /search     query sequences -> per-query top-k database hits
+                   (needs --search-db / --search-index)
   GET  /healthz    liveness + cache / coalescing-queue stats
 
 Flags:
@@ -32,6 +34,10 @@ Flags:
   --tree-seed           default bootstrap/ML seed (part of the tree
                         cache fingerprint)
   --cluster-threshold   N at or below which cluster/auto trees go dense
+  --search-db           database FASTA enabling POST /search
+  --search-index        search-index artifact: loaded when present, else
+                        built from --search-db and saved atomically
+  --search-k            seeding k-mer width for --search-db index builds
   --dist/--mesh         shard requests of >= --dist-threshold sequences
                         over the mesh (repro.dist.mapreduce) and shard-map
                         /tree distance strips over it
@@ -93,6 +99,13 @@ def build_parser() -> argparse.ArgumentParser:
                          "override with {'seed': N})")
     ap.add_argument("--cluster-threshold", type=int, default=64,
                     help="N at or below which cluster/auto trees go dense")
+    ap.add_argument("--search-db", default=None,
+                    help="database FASTA enabling POST /search")
+    ap.add_argument("--search-index", default=None,
+                    help="search-index artifact: loaded when present, "
+                         "else built from --search-db and saved")
+    ap.add_argument("--search-k", type=int, default=6,
+                    help="seeding k-mer width for --search-db builds")
     ap.add_argument("--dist", action="store_true",
                     help="route large requests through repro.dist.mapreduce")
     ap.add_argument("--mesh", default=None,
@@ -119,6 +132,30 @@ def main(argv=None):
     if args.dist:
         from .mesh import mesh_from_arg
         mesh = mesh_from_arg(args.mesh)
+
+    search_index = None
+    if args.search_db or args.search_index:
+        if args.alphabet == "protein":
+            parser.error("--search-db needs a nucleotide --alphabet "
+                         "(base-4 k-mer seeding)")
+        from pathlib import Path
+
+        from ..search import SearchIndex
+        idx_path = Path(args.search_index) if args.search_index else None
+        if idx_path is not None and idx_path.exists():
+            search_index = SearchIndex.load(idx_path)
+        else:
+            if not args.search_db:
+                parser.error(f"--search-index {idx_path} does not exist; "
+                             f"pass --search-db to build it")
+            from ..data import read_fasta
+            db_names, db_seqs = read_fasta(args.search_db)
+            search_index = SearchIndex.build(db_names, db_seqs,
+                                             k=args.search_k,
+                                             alphabet=args.alphabet)
+            if idx_path is not None:
+                search_index.save(idx_path)
+
     service = MSAService(ServiceConfig(
         alphabet=args.alphabet, method=args.method, backend=args.backend,
         band=args.band, k=args.k, center=args.center,
@@ -131,7 +168,8 @@ def main(argv=None):
         tree_bootstrap=args.tree_bootstrap,
         tree_seed=args.tree_seed,
         cluster_threshold=args.cluster_threshold,
-        mesh=mesh, dist_threshold=args.dist_threshold))
+        mesh=mesh, dist_threshold=args.dist_threshold,
+        search_index=search_index))
     httpd = serve_http(service, args.host, args.port, verbose=args.verbose)
 
     def _shutdown(signum, frame):
@@ -143,7 +181,9 @@ def main(argv=None):
     print(f"serving MSA/phylogeny on http://{args.host}:{args.port} "
           f"(alphabet={args.alphabet} method={args.method} "
           f"backend={service.engine.backend}"
-          f"{' mesh' if mesh is not None else ''}) — Ctrl-C drains")
+          f"{' mesh' if mesh is not None else ''}"
+          f"{f' search_db={search_index.n_seqs}' if search_index else ''})"
+          f" — Ctrl-C drains")
     try:
         httpd.serve_forever()
     except KeyboardInterrupt:

@@ -1,0 +1,17 @@
+"""repro.search — batched query-vs-database homology search.
+
+The front end that completes the search -> align -> tree pipeline:
+``SearchIndex`` (encode a FASTA database once, per-row k-mer tables,
+atomic persistence), ``SearchEngine`` (mesh-shardable seed prefilter +
+``AlignEngine.align_pairs`` rescoring + e-value/coverage gates), and the
+Karlin–Altschul conversion in ``search.evalue``. Consumed by
+``launch/search_run`` (CLI, ``--pipeline`` chains a query FASTA all the
+way to a supported Newick tree) and ``repro.serve``'s ``/search``
+endpoint. docs/SEARCH.md is the guide.
+"""
+from .engine import SearchConfig, SearchEngine, seed_counts_batch
+from .evalue import bit_scores, evalues
+from .index import SearchIndex
+
+__all__ = ["SearchConfig", "SearchEngine", "SearchIndex",
+           "seed_counts_batch", "bit_scores", "evalues"]

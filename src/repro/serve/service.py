@@ -14,6 +14,11 @@ The request dataflow (docs/ARCHITECTURE.md has the full map):
                    ``"refine": "ml"`` routes through the ML refiner —
                    the cache fingerprint spans backend, refine mode,
                    substitution model, bootstrap count, and seed
+  POST /search     query sequences -> per-query top-k database hits
+                   (``repro.search``: mesh-shardable seed prefilter +
+                   DP rescore + e-value gates), content-hash cached
+                   like ``/align`` — requires a configured
+                   ``ServiceConfig.search_index``
   GET  /healthz    liveness + cache / queue stats
 
 Big requests compose with ``repro.dist``: with a mesh configured,
@@ -76,6 +81,10 @@ class ServiceConfig:
     mesh: Optional[object] = None
     dist_threshold: int = 512    # with a mesh: route N >= this through
                                  # mapreduce.msa_over_mesh
+    search_index: Optional[object] = None   # repro.search.SearchIndex:
+                                            # enables POST /search
+    search_cfg: Optional[object] = None     # SearchConfig override
+                                            # (default: index-matched)
 
     def msa_cfg(self) -> MSAConfig:
         return MSAConfig(method=self.method, alphabet=self.alphabet,
@@ -134,6 +143,15 @@ class MSAService:
         self._tree_lock = threading.Lock()
         self._draining = False
         self._t0 = time.time()
+        self.search_engine = None
+        self._search_db_fp = None
+        if cfg.search_index is not None:
+            from ..search import SearchConfig, SearchEngine
+            scfg = cfg.search_cfg or SearchConfig(
+                alphabet=cfg.search_index.alphabet, k=cfg.search_index.k)
+            self.search_engine = SearchEngine(scfg, mesh=cfg.mesh)
+            # the database half of every /search cache key; hash it once
+            self._search_db_fp = cfg.search_index.fingerprint()
 
     # ----------------------------------------------------------- helpers
 
@@ -347,13 +365,69 @@ class MSAService:
             resp["logl"] = result.logl
         return resp
 
+    def search(self, names: Sequence[str], seqs: Sequence[str], *,
+               max_hits: Optional[int] = None,
+               min_coverage: Optional[float] = None,
+               max_evalue: Optional[float] = None) -> dict:
+        """Per-query top-k database hits, content-hash cached.
+
+        The cache key spans everything that changes the result: the
+        database fingerprint, the search config, the effective gates,
+        and the canonicalized query set — so a permuted resubmission of
+        the same queries hits, and hits are mapped back to the caller's
+        order through the canonicalization permutation (same contract
+        as ``/align``).
+        """
+        self._check_open()
+        if self.search_engine is None:
+            raise ValueError("no search database configured "
+                             "(serve_msa --search-db)")
+        t0 = time.perf_counter()
+        names, seqs = list(names), list(seqs)
+        eng = self.search_engine
+        max_hits = eng.cfg.max_hits if max_hits is None else int(max_hits)
+        min_coverage = (eng.cfg.min_coverage if min_coverage is None
+                        else float(min_coverage))
+        max_evalue = (eng.cfg.max_evalue if max_evalue is None
+                      else float(max_evalue))
+        canon, perm = canonicalize(seqs)
+        key = canonical_key(canon, f"search/{self._search_db_fp}/"
+                                   f"{eng.cfg.fingerprint()}/{max_hits}/"
+                                   f"{min_coverage}/{max_evalue}")
+        entry = self.cache.get(key)
+        cached = entry is not None
+        if not cached:
+            result = eng.search([f"q{i}" for i in range(len(canon))],
+                                canon, self.cfg.search_index,
+                                max_hits=max_hits,
+                                min_coverage=min_coverage,
+                                max_evalue=max_evalue)
+            entry = {"hits": [q["hits"] for q in result["queries"]],
+                     "lengths": [q["length"] for q in result["queries"]],
+                     "stats": result["stats"]}
+            self.cache.put(key, entry, len(json.dumps(entry)))
+        inv = [0] * len(perm)
+        for i, p in enumerate(perm):
+            inv[p] = i
+        return {"search_id": key,
+                "queries": [{"name": names[j],
+                             "length": entry["lengths"][inv[j]],
+                             "hits": entry["hits"][inv[j]]}
+                            for j in range(len(seqs))],
+                "stats": entry["stats"], "cached": cached,
+                "cache": self.cache.stats(),
+                "elapsed_ms": (time.perf_counter() - t0) * 1e3}
+
     def healthz(self) -> dict:
         return {"status": "draining" if self._draining else "ok",
                 "uptime_s": round(time.time() - self._t0, 3),
                 "alphabet": self.cfg.alphabet, "method": self.cfg.method,
                 "backend": self.engine.backend,
                 "cache": self.cache.stats(),
-                "queue": self.coalescer.stats()}
+                "queue": self.coalescer.stats(),
+                "search_db": (self.cfg.search_index.n_seqs
+                              if self.cfg.search_index is not None
+                              else None)}
 
     def drain(self):
         """Refuse new work, finish everything in flight, flush the queue."""
@@ -413,6 +487,11 @@ class _Handler(BaseHTTPRequestHandler):
                     names, seqs = parse_sequences(payload)
                     self._send(200, svc.tree(names=names, seqs=seqs,
                                              **tree_kw))
+            elif self.path == "/search":
+                names, seqs = parse_sequences(payload)
+                kw = {k: payload.get(k) for k in
+                      ("max_hits", "min_coverage", "max_evalue")}
+                self._send(200, svc.search(names, seqs, **kw))
             else:
                 self._send(404, {"error": f"unknown path {self.path}"})
         except KeyError as e:

@@ -1,6 +1,11 @@
-"""Docs stay true: CLI reference drift + markdown link integrity."""
+"""Docs stay true: CLI reference drift + markdown link integrity +
+repo hygiene (no committed bytecode)."""
 import re
+import shutil
+import subprocess
 from pathlib import Path
+
+import pytest
 
 ROOT = Path(__file__).resolve().parents[1]
 
@@ -33,10 +38,10 @@ def test_markdown_relative_links_resolve():
     assert not missing, f"broken relative links: {missing}"
 
 
-def test_architecture_doc_covers_the_five_subsystems():
+def test_architecture_doc_covers_the_six_subsystems():
     text = (ROOT / "docs" / "ARCHITECTURE.md").read_text()
     for subsystem in ("repro.align", "repro.dist", "repro.phylo",
-                      "repro.phylo.ml", "repro.serve"):
+                      "repro.phylo.ml", "repro.serve", "repro.search"):
         assert f"`{subsystem}`" in text, f"{subsystem} missing"
     # the README points at the architecture map instead of duplicating it
     readme = (ROOT / "README.md").read_text()
@@ -67,3 +72,17 @@ def test_every_docs_page_is_reachable_from_architecture():
     assert not orphans, (
         f"docs pages unreachable from docs/ARCHITECTURE.md: {orphans} — "
         f"link them from the architecture map (or a page it links)")
+
+
+def test_no_tracked_bytecode():
+    """Hygiene lint: compiled bytecode must never be committed — it is
+    machine-specific noise that churns every diff (.gitignore covers
+    ``__pycache__/`` and ``*.pyc``; this catches force-adds)."""
+    if shutil.which("git") is None or not (ROOT / ".git").exists():
+        pytest.skip("not a git checkout")
+    proc = subprocess.run(["git", "ls-files", "*.pyc", "**/__pycache__/*"],
+                          cwd=ROOT, capture_output=True, text=True)
+    if proc.returncode != 0:
+        pytest.skip(f"git ls-files unavailable: {proc.stderr.strip()}")
+    tracked = [ln for ln in proc.stdout.splitlines() if ln]
+    assert not tracked, f"bytecode files are tracked by git: {tracked}"

@@ -1,0 +1,177 @@
+"""Property tests hardening the k-mer seeding/chaining core.
+
+``core.kmer_index`` is load-bearing twice over: the MSA stage's trie
+replacement and ``repro.search``'s seed prefilter both stand on
+``kmer_codes`` -> ``build_center_index`` -> ``chain_anchors``. These
+tests pin the invariants both consumers assume:
+
+  * every accepted anchor is a *true* k-mer match inside both true
+    lengths, and the chain is strictly monotone and non-overlapping in
+    both coordinates;
+  * a pair chains >= 1 anchor iff the two sequences share any valid
+    k-mer at all (the brute-force sensitivity oracle — no silent seed
+    misses, no fabricated seeds);
+  * ``ok`` is exactly the "every DP segment fits the budget" predicate,
+    including the count==0 corner: a pair with no anchors is still ok
+    when the whole [0,lq)x[0,lc) rectangle fits one full-DP segment
+    (short queries, fragments below the k-mer width) — the driver's
+    fallback would do exactly that DP anyway;
+  * ``kmer_codes`` degenerate inputs: buffers shorter than k yield the
+    empty code array (never a negative-size window), all-ambiguous
+    windows are invalid, and valid codes equal the brute-force base-4
+    encoding.
+"""
+import jax.numpy as jnp
+import numpy as np
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # CI image has no hypothesis; seeded fallback
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import alphabet as ab
+from repro.core import kmer_index
+
+K = 5
+BIG_SEG = 1 << 20
+
+DNA_SEQ = st.text(alphabet="ACGTN", min_size=0, max_size=80)
+
+
+def _chain(q, c, *, k=K, max_seg=BIG_SEG, max_anchors=16):
+    qe = jnp.asarray(ab.DNA.encode(q))
+    ce = jnp.asarray(ab.DNA.encode(c))
+    table = kmer_index.build_center_index(ce, jnp.int32(len(c)), k=k)
+    a = kmer_index.chain_anchors(qe, jnp.int32(len(q)), table,
+                                 jnp.int32(len(c)), k=k, stride=1,
+                                 max_anchors=max_anchors, max_seg=max_seg)
+    return (np.asarray(a.q_pos), np.asarray(a.c_pos),
+            int(a.count), bool(a.ok))
+
+
+def _valid_kmers(s, k=K):
+    return {s[i: i + k] for i in range(len(s) - k + 1)
+            if "N" not in s[i: i + k]}
+
+
+@settings(max_examples=30, deadline=None)
+@given(DNA_SEQ, DNA_SEQ)
+def test_anchors_are_true_matches_and_strictly_monotone(q, c):
+    qp, cp, cnt, _ = _chain(q, c)
+    for i in range(cnt):
+        # true k-mer match, fully inside both true lengths, unambiguous
+        assert qp[i] + K <= len(q) and cp[i] + K <= len(c)
+        window = q[qp[i]: qp[i] + K]
+        assert window == c[cp[i]: cp[i] + K]
+        assert "N" not in window
+    for i in range(cnt - 1):
+        # strictly monotone and non-overlapping in both coordinates
+        assert qp[i + 1] >= qp[i] + K
+        assert cp[i + 1] >= cp[i] + K
+
+
+@settings(max_examples=30, deadline=None)
+@given(DNA_SEQ, DNA_SEQ)
+def test_sensitivity_oracle_anchor_iff_shared_kmer(q, c):
+    # brute force: does any valid k-mer occur in both sequences?
+    shared = bool(_valid_kmers(q) & _valid_kmers(c))
+    _, _, cnt, _ = _chain(q, c)
+    # the first shared window always chains from the empty chain (the
+    # table stores first occurrences, min >= 0 exists), and every anchor
+    # is a true match — so count >= 1 exactly when a shared k-mer exists
+    assert (cnt >= 1) == shared
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.text(alphabet="ACGT", min_size=2 * K, max_size=100),
+       st.integers(0, 10**6))
+def test_sensitivity_on_high_identity_pairs(base, seed):
+    # sparse substitutions (one per 3k positions) leave intact shared
+    # windows: a homologous pair above ~93% identity must always seed
+    rng = np.random.default_rng(seed)
+    q = list(base)
+    for p in range(0, len(q), 3 * K):
+        q[p] = "ACGT"[rng.integers(0, 4)]
+    _, _, cnt, ok = _chain("".join(q), base)
+    assert cnt >= 1
+    assert ok      # unlimited budget: the pair never needs a fallback
+
+
+@settings(max_examples=30, deadline=None)
+@given(DNA_SEQ, DNA_SEQ, st.integers(1, 12))
+def test_ok_is_exactly_the_segment_budget_predicate(q, c, max_seg):
+    qp, cp, cnt, ok = _chain(q, c, max_seg=max_seg)
+    q_end = c_end = 0
+    for i in range(cnt):
+        # accepted anchors can only close segments within the budget
+        assert qp[i] - q_end <= max_seg and cp[i] - c_end <= max_seg
+        q_end, c_end = qp[i] + K, cp[i] + K
+    tail_within = (len(q) - q_end <= max_seg) and (len(c) - c_end <= max_seg)
+    if cnt == 0:
+        # no anchors: ok iff the whole rectangle is one in-budget DP
+        # segment (with q_end == c_end == 0 that is the tail predicate)
+        assert ok == (len(q) <= max_seg and len(c) <= max_seg)
+    else:
+        assert ok == tail_within
+
+
+@settings(max_examples=30, deadline=None)
+@given(DNA_SEQ, st.integers(2, 8))
+def test_kmer_codes_match_bruteforce(s, k):
+    codes = np.asarray(kmer_index.kmer_codes(
+        jnp.asarray(ab.DNA.encode(s)), jnp.int32(len(s)), k))
+    if len(s) < k:
+        assert codes.shape == (0,)
+        return
+    assert codes.shape == (len(s) - k + 1,)
+    enc = ab.DNA.encode(s)
+    for i, code in enumerate(codes):
+        window = enc[i: i + k]
+        if np.all(window < 4):
+            assert code == int(sum(int(b) * 4**j
+                                   for j, b in enumerate(window)))
+        else:
+            assert code == -1
+
+
+def test_kmer_codes_degenerate_inputs():
+    # shorter than k (including empty): no window, empty code array
+    for s in ("", "A", "ACG"):
+        codes = kmer_index.kmer_codes(
+            jnp.asarray(ab.DNA.encode(s)), jnp.int32(len(s)), 5)
+        assert codes.shape == (0,)
+    # all-ambiguous: every window invalid
+    codes = kmer_index.kmer_codes(
+        jnp.asarray(ab.DNA.encode("N" * 12)), jnp.int32(12), 5)
+    assert codes.shape == (8,) and bool(np.all(np.asarray(codes) == -1))
+    # length == k: exactly one (valid) window
+    codes = kmer_index.kmer_codes(
+        jnp.asarray(ab.DNA.encode("ACGTA")), jnp.int32(5), 5)
+    assert codes.shape == (1,) and int(codes[0]) >= 0
+    # padded buffer, short true length: windows past length-k are invalid
+    codes = np.asarray(kmer_index.kmer_codes(
+        jnp.asarray(ab.DNA.encode("ACGTACGT")), jnp.int32(6), 5))
+    assert list(codes >= 0) == [True, True, False, False]
+
+
+def test_short_query_chain_reports_ok_within_budget():
+    # a query below the k-mer width chains zero anchors; the pair is
+    # still ok when the whole rectangle fits one DP segment ...
+    _, _, cnt, ok = _chain("ACG", "ACGTACGTACGT", max_seg=64)
+    assert cnt == 0 and ok
+    # ... and must flag fallback when it does not
+    _, _, cnt, ok = _chain("ACG", "ACGTACGTACGT", max_seg=8)
+    assert cnt == 0 and not ok
+
+
+def test_kmer_msa_equals_plain_msa_on_fragment_families():
+    # driver equivalence for the count==0-but-ok path: a family holding a
+    # fragment below the k-mer width aligns bit-identically through the
+    # k-mer assembly (which full-DPs the single segment) and the plain
+    # full-DP path
+    from repro.core.msa import MSAConfig, center_star_msa, decode_msa
+    seqs = ["ACGTACGTACGTACGTACGT", "ACGTACGTACGAACGTACGT", "ACGTA",
+            "CGT"]
+    plain = center_star_msa(seqs, MSAConfig(method="plain"))
+    kmer = center_star_msa(seqs, MSAConfig(method="kmer", k=11))
+    assert decode_msa(plain.msa, MSAConfig(method="plain")) == \
+        decode_msa(kmer.msa, MSAConfig(method="kmer", k=11))

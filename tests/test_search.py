@@ -1,0 +1,213 @@
+"""repro.search tests: engine units, index persistence, the /search
+service method, and a subprocess end-to-end run pinning the ISSUE
+acceptance: ``search_run --pipeline`` turns a query FASTA + database
+FASTA into a supported Newick tree, with hits and topology bit-identical
+between single-host and a 2-shard ``--dist`` mesh and across repeated
+runs."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.search import SearchConfig, SearchEngine, SearchIndex
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+
+def _family_db(seed=0, n_members=4, n_decoys=4, L=120):
+    rng = np.random.default_rng(seed)
+
+    def rseq(n):
+        return "".join("ACGT"[i] for i in rng.integers(0, 4, n))
+
+    def mut(s, p=0.06):
+        return "".join("ACGT"[rng.integers(0, 4)] if rng.random() < p else x
+                       for x in s)
+
+    base = rseq(L)
+    names = [f"fam_m{j}" for j in range(n_members)] + \
+        [f"decoy{j}" for j in range(n_decoys)]
+    seqs = [mut(base) for _ in range(n_members)] + \
+        [rseq(L) for _ in range(n_decoys)]
+    return names, seqs, mut(base)
+
+
+@pytest.fixture(scope="module")
+def planted():
+    names, seqs, query = _family_db()
+    engine = SearchEngine(SearchConfig(max_hits=6, max_evalue=1e-6))
+    index = engine.build_index(names, seqs)
+    return engine, index, query
+
+
+def test_planted_family_ranks_top(planted):
+    engine, index, query = planted
+    res = engine.search(["q"], [query], index)
+    hits = res["queries"][0]["hits"]
+    assert hits, "planted homolog found no hits"
+    top = hits[0]
+    assert top["target"].startswith("fam_")
+    assert top["coverage"] > 0.9
+    assert top["evalue"] < 1e-20
+    # scores are sorted descending within the query
+    assert [h["score"] for h in hits] == \
+        sorted((h["score"] for h in hits), reverse=True)
+
+
+def test_gates_are_respected(planted):
+    engine, index, query = planted
+    assert len(engine.search(["q"], [query], index,
+                             max_hits=2)["queries"][0]["hits"]) <= 2
+    assert engine.search(["q"], [query], index,
+                         max_evalue=0.0)["queries"][0]["hits"] == []
+    assert engine.search(["q"], [query], index,
+                         min_coverage=1.01)["queries"][0]["hits"] == []
+
+
+def test_prefiltered_topk_matches_exhaustive_oracle(planted):
+    engine, index, query = planted
+    fast = engine.search(["q"], [query], index)
+    oracle = engine.search(["q"], [query], index, exhaustive=True)
+    assert fast["queries"][0]["hits"] == oracle["queries"][0]["hits"]
+    assert fast["stats"]["candidates"] <= oracle["stats"]["candidates"]
+
+
+def test_empty_and_short_queries_return_no_hits(planted):
+    engine, index, _ = planted
+    res = engine.search(["empty", "tiny"], ["", "ACG"], index)
+    assert [q["hits"] for q in res["queries"]] == [[], []]
+
+
+def test_index_save_load_roundtrip(planted, tmp_path):
+    engine, index, query = planted
+    path = tmp_path / "db.idx.npz"
+    index.save(path)
+    loaded = SearchIndex.load(path)
+    assert loaded.fingerprint() == index.fingerprint()
+    assert loaded.names == index.names
+    a = engine.search(["q"], [query], index)
+    b = engine.search(["q"], [query], loaded)
+    assert json.dumps(a) == json.dumps(b)
+
+
+def test_index_rejects_future_format_version(tmp_path):
+    path = tmp_path / "future.npz"
+    np.savez(path, version=np.int32(99))
+    with pytest.raises(ValueError, match="format v99"):
+        SearchIndex.load(path)
+
+
+def test_index_build_validation():
+    with pytest.raises(ValueError, match="empty database"):
+        SearchIndex.build([], [], k=5)
+    with pytest.raises(ValueError, match="nucleotide"):
+        SearchIndex.build(["a"], ["ACDEFG"], alphabet="protein")
+    with pytest.raises(ValueError, match="names"):
+        SearchIndex.build(["a", "b"], ["ACGT"])
+
+
+def test_service_search_endpoint_caches_and_maps_order(planted):
+    from repro.serve import MSAService, ServiceConfig
+    _, index, query = planted
+    svc = MSAService(ServiceConfig(search_index=index))
+    names, seqs = ["q0", "q1"], [query, "ACGTACGTACGT"]
+    r1 = svc.search(names, seqs, max_evalue=1e-6)
+    assert not r1["cached"]
+    assert r1["queries"][0]["hits"][0]["target"].startswith("fam_")
+    # permuted resubmission hits the cache and maps back to caller order
+    r2 = svc.search(list(reversed(names)), list(reversed(seqs)),
+                    max_evalue=1e-6)
+    assert r2["cached"]
+    assert r2["queries"][1]["name"] == "q0"
+    assert r2["queries"][1]["hits"] == r1["queries"][0]["hits"]
+    assert svc.healthz()["search_db"] == index.n_seqs
+    # a service without a database 400s the request
+    svc_nodb = MSAService(ServiceConfig())
+    with pytest.raises(ValueError, match="no search database"):
+        svc_nodb.search(names, seqs)
+
+
+# --------------------------------------------------------- subprocess e2e
+
+SCRIPT = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import json
+import sys
+sys.path.insert(0, %r)
+import numpy as np
+
+workdir = %r
+rng = np.random.default_rng(3)
+def rseq(n):
+    return "".join("ACGT"[i] for i in rng.integers(0, 4, n))
+def mut(s, p=0.06):
+    return "".join("ACGT"[rng.integers(0, 4)] if rng.random() < p else x
+                   for x in s)
+base = rseq(100)
+with open(workdir + "/db.fasta", "w") as f:
+    for j in range(4):
+        f.write(f">fam_m{j}\n{mut(base)}\n")
+    for j in range(3):
+        f.write(f">decoy{j}\n{rseq(100)}\n")
+with open(workdir + "/q.fasta", "w") as f:
+    f.write(f">query\n{mut(base)}\n")
+
+from repro.launch import search_run
+
+common = ["--db", workdir + "/db.fasta", "--query", workdir + "/q.fasta",
+          "--max-hits", "4", "--max-evalue", "1e-6",
+          "--pipeline", "--bootstrap", "2", "--ml-steps", "4"]
+
+def run(out, extra=()):
+    search_run.main(common + ["--out", workdir + "/" + out] + list(extra))
+    hits = open(workdir + "/" + out + "/hits.json").read()
+    tree = open(workdir + "/" + out + "/family_000_query/tree.nwk").read()
+    return hits, tree
+
+h_host, t_host = run("host")
+h_rep, t_rep = run("host_rep")                      # repeated run
+h_mesh, t_mesh = run("mesh", ["--dist", "--mesh", "2x1"])
+
+def hits_only(h):
+    # the stats block records which seeding stage ran ("host" vs
+    # "mesh"); bit-identity is over the scientific payload
+    return json.dumps(json.loads(h)["queries"])
+
+out = {
+    "repeat_hits_identical": h_host == h_rep,
+    "repeat_tree_identical": t_host == t_rep,
+    "mesh_hits_identical": hits_only(h_host) == hits_only(h_mesh),
+    "mesh_tree_identical": t_host == t_mesh,
+    "mesh_seed_stage": json.loads(h_mesh)["stats"]["seed"],
+    "n_hits": len(json.loads(h_host)["queries"][0]["hits"]),
+    "newick": t_host.strip(),
+}
+print("RESULT " + json.dumps(out))
+'''
+
+
+def test_pipeline_e2e_mesh_and_repeat_bit_identical(tmp_path):
+    """query FASTA + DB FASTA -> supported Newick; hits and topology
+    bit-identical between 1x1-host and 2-shard mesh, and across runs."""
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT % (SRC, str(tmp_path))],
+        capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT ")][-1]
+    out = json.loads(line[len("RESULT "):])
+    assert out["repeat_hits_identical"]
+    assert out["repeat_tree_identical"]
+    assert out["mesh_hits_identical"]
+    assert out["mesh_tree_identical"]
+    assert out["mesh_seed_stage"] == "mesh"
+    assert out["n_hits"] == 4          # the whole planted family
+    nwk = out["newick"]
+    assert nwk.endswith(";") and "query" in nwk
+    # bootstrap support labels on internal edges: ")<float>:" in newick
+    import re
+    assert re.search(r"\)\d+\.\d+:", nwk), nwk
