@@ -1,0 +1,173 @@
+"""Kernel roofline benchmark + the BENCH_kernels.json regression gate.
+
+Two kinds of rows, both from ``benchmarks.roofline``'s alignment-kernel
+cost models:
+
+  model     analytic flops/hbm_bytes at the default pow2 bucket shapes
+            (``kernel_rooflines``) — deterministic functions of the
+            shapes, so the CI gate compares THESE against the recorded
+            baseline: >20% more HBM bytes or FLOPs for the same shape
+            means a kernel regressed its traffic (e.g. a direction
+            matrix leaked back into HBM). No wall-clock noise.
+  measured  the same kernels actually executed once at smoke shapes with
+            wall time and achieved-vs-peak fractions (``achieved``) —
+            informational under the CPU interpreter, the real number on
+            TPU.
+
+The headline invariant is checked directly: at every default bucket
+shape the fused banded pairs kernel must move strictly fewer HBM bytes
+than the O(n·m) SW direction-matrix path.
+
+CLI: ``python -m benchmarks.bench_kernels [--json PATH] [--check]
+[--write-baseline]`` — ``run.py --json-kernels`` drives the same
+functions for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+BASELINE = Path(__file__).parent / "baselines" / "BENCH_kernels.json"
+
+# keys that identify a row across runs; everything else is a metric
+_KEY_FIELDS = ("kernel", "mode", "B", "n", "m", "N", "M", "L", "band",
+               "pack")
+# gated metrics: deterministic, so any drift is a code change
+_GATED = ("flops", "hbm_bytes")
+_TOL = 0.20
+
+
+def _key(row):
+    return tuple((k, row.get(k)) for k in _KEY_FIELDS)
+
+
+def model_rows():
+    from . import roofline
+    return [{**r, "mode": "model"} for r in roofline.kernel_rooflines()]
+
+
+def measured_rows(smoke: bool = True):
+    """Run each kernel once at smoke shapes; wall time + achieved fracs."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.align import backends
+    from repro.kernels.distance import match_valid_pallas
+    from . import common, roofline
+
+    rng = np.random.default_rng(0)
+    B, n, m, W = (4, 64, 64, 16) if smoke else (16, 256, 256, 32)
+    sub = jnp.asarray(np.where(np.eye(6), 2.0, -1.0), jnp.float32)
+    Q = jnp.asarray(rng.integers(0, 4, (B, n)), jnp.int8)
+    T = jnp.asarray(rng.integers(0, 4, (B, m)), jnp.int8)
+    qlens = jnp.full((B,), n, jnp.int32)
+    tlens = jnp.full((B,), m, jnp.int32)
+    b = T[0]
+
+    rows = []
+
+    def run(name, cost, fn, *args):
+        us, _ = common.time_call(fn, *args, repeats=3, warmup=1)
+        row = {**roofline.achieved(cost, us / 1e6), "mode": "measured"}
+        rows.append(row)
+        common.emit(f"kernels/{name}/B{B}", us,
+                    f"hbm_bytes={int(cost['hbm_bytes'])}")
+
+    run("sw_forward", roofline.sw_forward_cost(B, n, m),
+        lambda: backends.pallas_align_pairs(
+            Q, qlens, T, tlens, sub, gap_open=3, gap_extend=1))
+    run("banded_forward", roofline.banded_forward_cost(B, n, m, W),
+        lambda: backends.banded_pallas_align_batch(
+            Q, qlens, b, m, sub, gap_open=3, gap_extend=1, band=W,
+            block_rows=n))
+    run("fused_pairs", roofline.fused_pairs_cost(B, n, m, W),
+        lambda: backends.banded_pallas_align_pairs(
+            Q, qlens, T, tlens, sub, gap_open=3, gap_extend=1, band=W))
+    run("distance", roofline.distance_cost(B * 8, B * 8, n),
+        lambda: match_valid_pallas(
+            jnp.asarray(rng.integers(0, 6, (B * 8, n)), jnp.int8),
+            jnp.asarray(rng.integers(0, 6, (B * 8, n)), jnp.int8),
+            n_chars=4, gap_code=5, bn=B * 8, bl=n))
+    return rows
+
+
+def kernel_matrix(smoke: bool = True):
+    return model_rows() + measured_rows(smoke=smoke)
+
+
+def check_invariants(rows):
+    """The fused pairs kernel must move strictly fewer HBM bytes than the
+    direction-matrix SW path at every model shape."""
+    failures = []
+    by_shape = {}
+    for r in rows:
+        if r.get("mode") != "model":
+            continue
+        by_shape.setdefault((r.get("B"), r.get("n"), r.get("m")),
+                            {})[r["kernel"]] = r
+    for shape, kernels in by_shape.items():
+        sw, fused = kernels.get("sw_forward"), kernels.get("fused_pairs")
+        if sw and fused and not fused["hbm_bytes"] < sw["hbm_bytes"]:
+            failures.append(
+                f"fused_pairs hbm_bytes {fused['hbm_bytes']:.0f} not < "
+                f"sw_forward {sw['hbm_bytes']:.0f} at shape {shape}")
+    return failures
+
+
+def check_against_baseline(rows, baseline_path: Path = BASELINE,
+                           tol: float = _TOL):
+    """Regressions vs the recorded baseline: >tol more of any gated
+    metric for a row the baseline knows. New rows pass (they have no
+    baseline yet); vanished rows fail (coverage loss is a regression)."""
+    if not baseline_path.exists():
+        return [f"no baseline at {baseline_path} (run --write-baseline)"]
+    base = {tuple(map(tuple, k)): v for k, v in
+            (( _key(r), r) for r in json.loads(baseline_path.read_text()))}
+    cur = {_key(r): r for r in rows}
+    failures = []
+    for k, b in base.items():
+        if b.get("mode") != "model":
+            continue
+        r = cur.get(k)
+        if r is None:
+            failures.append(f"baseline row vanished: {dict(k)}")
+            continue
+        for metric in _GATED:
+            if metric in b and r.get(metric, 0) > b[metric] * (1 + tol):
+                failures.append(
+                    f"{dict(k)}: {metric} {r[metric]:.3g} > baseline "
+                    f"{b[metric]:.3g} (+{tol:.0%})")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    ap.add_argument("--check", action="store_true",
+                    help="gate against the recorded baseline")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="record the model rows as the new baseline")
+    args = ap.parse_args()
+
+    rows = kernel_matrix(smoke=args.smoke)
+    failures = check_invariants(rows)
+    if args.check:
+        failures += check_against_baseline(rows)
+    if args.write_baseline:
+        BASELINE.parent.mkdir(parents=True, exist_ok=True)
+        with open(BASELINE, "w") as f:
+            json.dump([r for r in rows if r["mode"] == "model"], f, indent=1)
+        print(f"# wrote baseline to {BASELINE}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"# wrote {len(rows)} kernel rows to {args.json}")
+    if failures:
+        raise SystemExit("BENCH_kernels gate failed:\n  " +
+                         "\n  ".join(failures))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,29 +1,60 @@
-"""Roofline analysis from the compiled dry-run artifacts (§Roofline).
+"""Roofline analysis: LM dry-run artifacts + alignment-kernel cost models.
 
-Terms per (arch x shape), single-pod (256 x v5e):
-  compute    = FLOPs/device / 197e12        [bf16 MXU peak]
-  memory     = bytes/device / 819e9         [HBM bw]
-  collective = collective bytes/device / 50e9  [ICI per link]
+Two independent sections share one set of hardware peaks (``Peaks`` — no
+hardcoded chip: pass your own numbers; the default is a 256-chip v5e pod):
 
+**LM layer-scan section** (``analyze``/``main``) — rooflines for the
+training/serving side from compiled dry-run artifacts. Terms per
+(arch x shape):
+  compute    = FLOPs/device / peaks.flops      [bf16 MXU peak]
+  memory     = bytes/device / peaks.hbm_bw     [HBM bw]
+  collective = collective bytes/device / peaks.ici_bw  [ICI per link]
 FLOPs/bytes come from ``compiled.cost_analysis()`` of the ROOFLINE lowering
 (layer scan unrolled, microbatches=1) because XLA counts while bodies once
 regardless of trip count (validated in EXPERIMENTS.md §Roofline). Two inner
 scans remain rolled even there — the flash-attention KV-chunk scan and the
 SSD chunk scan — so their missing trips are added back analytically from the
-exact einsum shapes (documented below); everything else is straight from the
-artifact. MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (inference)
-gives the useful-compute ratio.
+exact einsum shapes; everything else is straight from the artifact.
+MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (inference) gives the
+useful-compute ratio.
+
+**Alignment-kernel section** (``sw_forward_cost`` /
+``banded_forward_cost`` / ``fused_pairs_cost`` / ``distance_cost`` /
+``kernel_rooflines``) — analytic FLOP and HBM-byte models for the
+``repro.kernels`` hot path (the HAlign-II map(1) stage). These are exact
+functions of the shapes, so ``benchmarks/bench_kernels.py`` can gate
+regressions on them deterministically (no wall-clock noise under the CPU
+interpreter) and report achieved-vs-peak fractions when a measured wall
+time is available. The headline invariant lives here: the fused banded
+pairs kernel has NO direction-matrix term in its HBM bytes, so
+``fused_pairs_cost(...)["hbm_bytes"] < sw_forward_cost(...)["hbm_bytes"]``
+at every default bucket shape.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 from pathlib import Path
 from typing import Dict, Optional
 
-PEAK_FLOPS = 197e12        # bf16 / chip
-HBM_BW = 819e9             # bytes/s / chip
-ICI_BW = 50e9              # bytes/s / link
-CHIPS = 256                # single-pod roofline
+
+@dataclasses.dataclass(frozen=True)
+class Peaks:
+    """Hardware peaks the rooflines are normalized by (per chip/link)."""
+    flops: float = 197e12      # bf16 MXU peak, FLOP/s per chip
+    hbm_bw: float = 819e9      # HBM bytes/s per chip
+    ici_bw: float = 50e9       # ICI bytes/s per link
+    chips: int = 256           # pod size the per-device numbers assume
+
+
+DEFAULT_PEAKS = Peaks()        # 256 x v5e — override, don't edit
+
+# Back-compat module constants (several call sites and docs reference
+# these names); derived from the default peaks, not a second source.
+PEAK_FLOPS = DEFAULT_PEAKS.flops
+HBM_BW = DEFAULT_PEAKS.hbm_bw
+ICI_BW = DEFAULT_PEAKS.ici_bw
+CHIPS = DEFAULT_PEAKS.chips
 KV_CHUNK = 1024            # layers.xla_flash default
 SSD_CHUNK = 128            # mamba2.ssd_chunked default
 
@@ -100,10 +131,12 @@ def analytic_flops(cfg, shape) -> float:
     return fwd * mult
 
 
-def min_traffic_bytes(cfg, shape, mu: int) -> float:
+def min_traffic_bytes(cfg, shape, mu: int,
+                      peaks: Peaks = DEFAULT_PEAKS) -> float:
     """Analytic LOWER bound on HBM bytes/device/step (params + optimizer +
     remat-boundary activations + caches; perfect fusion assumed). The XLA
     'bytes accessed' number is the matching UPPER bound (fusion-blind)."""
+    CHIPS = peaks.chips
     p_dev = cfg.param_count() / CHIPS
     B, S = shape.global_batch, shape.seq_len
     if shape.kind == "train":
@@ -129,9 +162,11 @@ def min_traffic_bytes(cfg, shape, mu: int) -> float:
     return p_dev * 2 + cache + ssm
 
 
-def analyze(rec: Dict, cfg, shape) -> Optional[Dict]:
+def analyze(rec: Dict, cfg, shape,
+            peaks: Peaks = DEFAULT_PEAKS) -> Optional[Dict]:
     if "error" in rec or "skipped" in rec:
         return None
+    CHIPS = peaks.chips
     # roofline lowerings unroll layers but keep the (homogeneous) microbatch
     # scan: multiply per-step totals by the recorded mu — exact, not an
     # estimate. Records lowered with mu=1 multiply by 1.
@@ -155,10 +190,10 @@ def analyze(rec: Dict, cfg, shape) -> Optional[Dict]:
         corrected = analytic_flops(cfg, shape) / CHIPS
         bytes_dev = rec["bytes_accessed_per_device"] * ng_mu
         coll = sum(rec["collective_bytes_per_device"].values()) * ng_mu
-    t_c = corrected / PEAK_FLOPS
-    t_m_hi = bytes_dev / HBM_BW
-    t_m_lo = min_traffic_bytes(cfg, shape, mu) / HBM_BW
-    t_n = coll / ICI_BW
+    t_c = corrected / peaks.flops
+    t_m_hi = bytes_dev / peaks.hbm_bw
+    t_m_lo = min_traffic_bytes(cfg, shape, mu, peaks) / peaks.hbm_bw
+    t_n = coll / peaks.ici_bw
     # bottleneck judged with the achievable (min-traffic) memory term; the
     # fusion-blind upper bound is reported alongside
     terms = {"compute": t_c, "memory": t_m_lo, "collective": t_n}
@@ -177,6 +212,115 @@ def analyze(rec: Dict, cfg, shape) -> Optional[Dict]:
     }
 
 
+# --------------------------------------------------------------------------
+# Alignment-kernel rooflines (repro.kernels — the HAlign-II map(1) stage)
+# --------------------------------------------------------------------------
+#
+# Exact analytic models, deterministic in the shapes: FLOPs from cells x
+# per-cell op count, HBM bytes from the tensors that actually cross the
+# HBM<->VMEM boundary (band state / score rows that stay in VMEM scratch
+# are *not* counted — that residency is the whole point of the kernels).
+
+GOTOH_CELL_FLOPS = 14       # M/Ix/Iy updates + dir packing per DP cell
+TRACE_STEP_FLOPS = 12       # byte decode + move select per traceback step
+
+
+def sw_forward_cost(B: int, n: int, m: int, n_chars: int = 6) -> Dict:
+    """kernels.sw forward: O(n·m) DP, int8 direction matrix to HBM."""
+    cells = B * n * (m + 1)
+    return {
+        "kernel": "sw_forward", "B": B, "n": n, "m": m,
+        "flops": float(cells * GOTOH_CELL_FLOPS),
+        # in: a + b int8, sub f32; out: dirs int8 (the dominant term) + out f32
+        "hbm_bytes": float(B * n + B * m + n_chars * n_chars * 4
+                           + cells + B * 8 * 4),
+    }
+
+
+def banded_forward_cost(B: int, n: int, m: int, band: int) -> Dict:
+    """kernels.banded forward: O(n·W) band, band state resident in VMEM."""
+    cells = B * n * band
+    return {
+        "kernel": "banded_forward", "B": B, "n": n, "m": m, "band": band,
+        "flops": float(cells * GOTOH_CELL_FLOPS),
+        "hbm_bytes": float(B * n + B * m + 6 * 6 * 4 + cells + B * 8 * 4),
+    }
+
+
+def fused_pairs_cost(B: int, n: int, m: int, band: int) -> Dict:
+    """kernels.banded fused pairs: forward + traceback in one program.
+
+    No direction-matrix term at all — dirs live and die in VMEM scratch.
+    HBM traffic is sequences in, aligned rows + stats out.
+    """
+    cells = B * n * band
+    steps = B * (n + m)
+    return {
+        "kernel": "fused_pairs", "B": B, "n": n, "m": m, "band": band,
+        "flops": float(cells * GOTOH_CELL_FLOPS + steps * TRACE_STEP_FLOPS),
+        "hbm_bytes": float(B * n + B * m + 6 * 6 * 4
+                           + 2 * B * (n + m) + B * 8 * 4),
+    }
+
+
+def distance_cost(N: int, M: int, L: int, n_chars: int = 4,
+                  pack: str = "int8") -> Dict:
+    """kernels.distance match/valid: one-hot MXU counting.
+
+    ``vmem_tile_bytes`` is the expanded one-hot operand footprint per grid
+    step — the number the int8 packing divides by 4 versus f32; HBM bytes
+    are int8 sequences in + count matrices out either way.
+    """
+    itemsize = 1 if pack == "int8" else 4
+    out_itemsize = 4                      # int32 counts / f32 legacy
+    flops = 2.0 * N * M * L * (n_chars + 1)   # match (C lanes) + valid dots
+    return {
+        "kernel": "distance", "N": N, "M": M, "L": L, "pack": pack,
+        "flops": float(flops),
+        "hbm_bytes": float(N * L + M * L + 2 * N * M * out_itemsize),
+        "vmem_tile_bytes": float(2 * 128 * 128 * n_chars * itemsize),
+    }
+
+
+def achieved(cost: Dict, wall_s: float, peaks: Peaks = DEFAULT_PEAKS) -> Dict:
+    """Achieved-vs-peak fractions for one measured kernel run (one chip)."""
+    if wall_s <= 0:
+        return {**cost, "wall_s": wall_s}
+    return {
+        **cost, "wall_s": wall_s,
+        "achieved_flops": cost["flops"] / wall_s,
+        "flops_frac_of_peak": cost["flops"] / wall_s / peaks.flops,
+        "achieved_hbm_bw": cost["hbm_bytes"] / wall_s,
+        "hbm_frac_of_peak": cost["hbm_bytes"] / wall_s / peaks.hbm_bw,
+    }
+
+
+def kernel_rooflines(shapes=None, peaks: Peaks = DEFAULT_PEAKS):
+    """Cost-model rows for the default bucket shapes (no execution).
+
+    Each row carries the analytic flops/hbm_bytes plus the arithmetic
+    intensity and the peak-bound wall time on ``peaks`` — what
+    BENCH_kernels.json records and the CI smoke gate compares.
+    """
+    if shapes is None:
+        # default pow2 bucket shapes the engine actually produces
+        shapes = [(64, 128, 128, 16), (64, 256, 256, 32), (32, 512, 512, 64)]
+    rows = []
+    for B, n, m, W in shapes:
+        for cost in (sw_forward_cost(B, n, m),
+                     banded_forward_cost(B, n, m, W),
+                     fused_pairs_cost(B, n, m, W),
+                     distance_cost(B, B, n)):
+            ai = cost["flops"] / max(cost["hbm_bytes"], 1.0)
+            rows.append({
+                **cost,
+                "intensity_flops_per_byte": ai,
+                "peak_bound_s": max(cost["flops"] / peaks.flops,
+                                    cost["hbm_bytes"] / peaks.hbm_bw),
+            })
+    return rows
+
+
 ADVICE = {
     "compute": "compute-bound: raise MXU utilization (larger tiles, bf16 "
                "everywhere, fewer remat recomputes)",
@@ -187,7 +331,7 @@ ADVICE = {
 }
 
 
-def main(out="results/roofline.md"):
+def main(out="results/roofline.md", peaks: Peaks = DEFAULT_PEAKS):
     from repro.configs import ALL_ARCHS, SHAPES, get_arch, shape_applicable
 
     recs: Dict = {}
@@ -233,7 +377,7 @@ def main(out="results/roofline.md"):
                 rows.append({"arch": arch, "shape": shape_name,
                              "skipped": "no dry-run record"})
                 continue
-            r = analyze(rec, cfg, shape)
+            r = analyze(rec, cfg, shape, peaks)
             if r:
                 rows.append(r)
 

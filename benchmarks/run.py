@@ -19,10 +19,16 @@ runs the ML-refinement matrix (``bench_ml``: logL gain + bootstrap
 throughput vs the NJ baseline on the Φ_DNA analogue) and writes its
 rows, and ``--json-search PATH`` runs the homology-search matrix
 (``bench_search``: queries/sec vs DB size, prefilter survival, top-k
-recall vs the exhaustive oracle) and writes its rows — CI uploads
-``BENCH_msa.json``, ``BENCH_tree.json``, ``BENCH_ml.json``, and
-``BENCH_search.json`` as artifacts so every bench trajectory is tracked per
-commit (``docs/BENCHMARKS.md`` documents the artifact schema).
+recall vs the exhaustive oracle) and writes its rows, and
+``--json-kernels PATH`` runs the kernel roofline matrix
+(``bench_kernels``: analytic flops/HBM-bytes at the default bucket
+shapes plus measured achieved-vs-peak rows) and GATES it against the
+recorded baseline (``benchmarks/baselines/BENCH_kernels.json`` — >20%
+regression on a gated metric fails the run) — CI uploads
+``BENCH_msa.json``, ``BENCH_tree.json``, ``BENCH_ml.json``,
+``BENCH_search.json``, and ``BENCH_kernels.json`` as artifacts so every
+bench trajectory is tracked per commit (``docs/BENCHMARKS.md`` documents
+the artifact schema).
 """
 from __future__ import annotations
 
@@ -44,6 +50,10 @@ def main() -> None:
     ap.add_argument("--json-search", default=None, metavar="PATH",
                     help="also run the homology-search matrix and write "
                          "its rows as JSON to PATH")
+    ap.add_argument("--json-kernels", default=None, metavar="PATH",
+                    help="also run the kernel roofline matrix, write its "
+                         "rows as JSON to PATH, and gate against the "
+                         "recorded baseline")
     args = ap.parse_args()
 
     from . import common
@@ -76,6 +86,14 @@ def main() -> None:
         bench_search.search_matrix(smoke=args.smoke)
         search_rows = common.ROWS[n_before:]
 
+    kernel_failures = []
+    kernel_rows = []
+    if args.json_kernels:
+        from . import bench_kernels
+        kernel_rows = bench_kernels.kernel_matrix(smoke=args.smoke)
+        kernel_failures = bench_kernels.check_invariants(kernel_rows)
+        kernel_failures += bench_kernels.check_against_baseline(kernel_rows)
+
     if args.json:
         with open(args.json, "w") as f:
             json.dump(common.ROWS, f, indent=1)
@@ -93,6 +111,14 @@ def main() -> None:
             json.dump(search_rows, f, indent=1)
         print(f"# wrote {len(search_rows)} search rows to "
               f"{args.json_search}")
+    if args.json_kernels:
+        with open(args.json_kernels, "w") as f:
+            json.dump(kernel_rows, f, indent=1)
+        print(f"# wrote {len(kernel_rows)} kernel rows to "
+              f"{args.json_kernels}")
+        if kernel_failures:
+            raise SystemExit("BENCH_kernels gate failed:\n  " +
+                             "\n  ".join(kernel_failures))
 
 
 if __name__ == "__main__":

@@ -1,9 +1,10 @@
 """repro.align — the backend-dispatching engine for the map(1) stage.
 
 See ``engine.AlignEngine`` (host API: bucketing + fallback),
-``backends`` (the jnp / pallas / banded primitives and the BACKENDS
-registry), ``banded`` (O(n·W) diagonal-band Gotoh), and ``bucketing``
-(power-of-two length buckets).
+``backends`` (the jnp / pallas / banded / banded-pallas primitives and
+the BACKENDS registry), ``banded`` (O(n·W) diagonal-band Gotoh; the
+native Pallas version lives in ``kernels.banded``), and ``bucketing``
+(power-of-two length and band buckets).
 """
 from .backends import (BACKENDS, PAIR_BACKENDS, BatchAlignment,  # noqa: F401
                        resolve_backend)

@@ -7,13 +7,21 @@ return gap-padded aligned rows of width ``n + m`` plus per-pair ``ok``
 flags (False = the backend's heuristic gave up and the pair needs a
 full-DP re-alignment — only the ``banded`` backend ever clears it).
 
-  jnp     the row-scan Gotoh oracle (``core.pairwise``); O(n·m) dirs
-  pallas  the ``kernels.sw`` Pallas kernel (compiled on TPU, interpreted
-          elsewhere) + the shared traceback; O(n·m) dirs in HBM, row
-          scores never leave VMEM
-  banded  diagonal band, O(n·W) dirs, per-pair overflow flags
+  jnp            the row-scan Gotoh oracle (``core.pairwise``); O(n·m)
+                 dirs
+  pallas         the ``kernels.sw`` Pallas kernel (compiled on TPU,
+                 interpreted elsewhere) + the shared traceback; O(n·m)
+                 dirs in HBM, row scores never leave VMEM
+  banded         diagonal band as a jnp scan, O(n·W) dirs, per-pair
+                 overflow flags
+  banded-pallas  the same band as a native Pallas kernel
+                 (``kernels.banded``): band state resident in VMEM,
+                 wavefront rows, in-kernel overflow flags — bit-identical
+                 to ``banded`` by construction (both call
+                 ``kernels.banded.ref``); the pairs variant fuses
+                 score+traceback so no direction matrix reaches HBM
 
-All three are registered in ``BACKENDS`` so the engine, the shard_map
+All four are registered in ``BACKENDS`` so the engine, the shard_map
 pipeline, and the benchmarks dispatch by name.
 
 Each backend also has a *pairs* variant (``*_align_pairs``,
@@ -32,6 +40,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core import pairwise
+from ..kernels.banded.ops import banded_forward_pallas, banded_pairs_fused
 from ..kernels.sw.ops import gotoh_forward_pallas
 from . import banded as banded_mod
 
@@ -135,16 +144,56 @@ def banded_align_pairs(Q, qlens, T, tlens, sub, *, gap_open, gap_extend,
                          tlens.astype(jnp.int32))
 
 
+@functools.partial(jax.jit, static_argnames=("gap_open", "gap_extend",
+                                             "band", "gap_code",
+                                             "block_rows", "interpret"))
+def banded_pallas_align_batch(Q, lens, b, lb, sub, *, gap_open, gap_extend,
+                              band=64, gap_code=5, block_rows=128,
+                              interpret=None):
+    # Forward runs in the kernel (band in VMEM, O(n·W) dirs to HBM);
+    # the jnp traceback then walks those dirs exactly like ``banded``.
+    B, n = Q.shape
+    Bm = jnp.broadcast_to(b[None, :], (B, b.shape[0]))
+    lens2 = jnp.stack([lens.astype(jnp.int32),
+                       jnp.full((B,), lb, jnp.int32)], axis=1)
+    fwd = banded_forward_pallas(Q, Bm, lens2, sub, gap_open=gap_open,
+                                gap_extend=gap_extend, band=band,
+                                block_rows=min(block_rows, max(n, 1)),
+                                interpret=interpret)
+    a_row, b_row, k, ok = jax.vmap(
+        lambda a_, b_, f: banded_mod.banded_traceback(a_, b_, f, gap_code,
+                                                      band=band))(Q, Bm, fwd)
+    return BatchAlignment(fwd.score, a_row, b_row, k, ok)
+
+
+@functools.partial(jax.jit, static_argnames=("gap_open", "gap_extend",
+                                             "band", "gap_code",
+                                             "interpret"))
+def banded_pallas_align_pairs(Q, qlens, T, tlens, sub, *, gap_open,
+                              gap_extend, band=64, gap_code=5,
+                              interpret=None):
+    # Fully fused: score rows AND the traceback band stay in VMEM for the
+    # whole bucket; the per-pair direction matrix never reaches HBM.
+    lens2 = jnp.stack([qlens.astype(jnp.int32), tlens.astype(jnp.int32)],
+                      axis=1)
+    score, a_row, b_row, k, ok = banded_pairs_fused(
+        Q, T, lens2, sub, gap_open=gap_open, gap_extend=gap_extend,
+        band=band, gap_code=gap_code, interpret=interpret)
+    return BatchAlignment(score, a_row, b_row, k, ok)
+
+
 BACKENDS = {
     "jnp": jnp_align_batch,
     "pallas": pallas_align_batch,
     "banded": banded_align_batch,
+    "banded-pallas": banded_pallas_align_batch,
 }
 
 PAIR_BACKENDS = {
     "jnp": jnp_align_pairs,
     "pallas": pallas_align_pairs,
     "banded": banded_align_pairs,
+    "banded-pallas": banded_pallas_align_pairs,
 }
 
 

@@ -46,28 +46,21 @@ to the full-DP backends.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from ..core.pairwise import (NEG, M_ST, IX_ST, IY_ST, FRESH, AlignResult,
-                             _pack)
+from ..core.pairwise import NEG, AlignResult
+# The pure band recurrence lives in kernels.banded.ref so the native
+# Pallas kernels and this jnp scan call the *same* math (bit-identical
+# parity by construction); re-exported here as the historical home.
+from ..kernels.banded.ref import (BandedForward, band_lo, band_row_init,
+                                  band_row_update, edge_pressure,
+                                  trace_step_math)
 
-
-class BandedForward(NamedTuple):
-    dirs: jnp.ndarray       # (n, W) int8 packed bytes for DP rows 1..n
-    score: jnp.ndarray      # f32 global score at (la, lb)
-    start_i: jnp.ndarray    # i32 == la
-    start_j: jnp.ndarray    # i32 == lb
-    start_state: jnp.ndarray
-    edge: jnp.ndarray       # bool: some row's best cell hit the band edge
-
-
-def band_lo(i, la, lb, band: int):
-    """Leftmost absolute column stored for DP row ``i``."""
-    c = jnp.where(la == 0, lb, (i * lb) // jnp.maximum(la, 1))
-    return (c - band // 2).astype(jnp.int32)
+__all__ = ["BandedForward", "band_lo", "band_row_init", "band_row_update",
+           "edge_pressure", "trace_step_math", "banded_forward",
+           "banded_traceback", "banded_align_pair"]
 
 
 def banded_forward(a, la, b, lb, sub, gap_open, gap_extend, *, band: int):
@@ -77,73 +70,25 @@ def banded_forward(a, la, b, lb, sub, gap_open, gap_extend, *, band: int):
     Returns a BandedForward whose dirs buffer is (n, band) — never the
     full (n+1)×(m+1) matrix.
     """
-    n, m = a.shape[0], b.shape[0]
+    n = a.shape[0]
     W = band
     go = jnp.float32(gap_open)
     ge = jnp.float32(gap_extend)
     sub = sub.astype(jnp.float32)
     la = la.astype(jnp.int32)
     lb = lb.astype(jnp.int32)
-    offs = jnp.arange(W, dtype=jnp.int32)
-    offs_f = offs.astype(jnp.float32)
     mid = W // 2
 
-    # Row 0 boundary in band coordinates.
+    m0, ix0, iy0, cap0, hb0 = band_row_init(la, lb, go, ge, band=W)
     lo0 = band_lo(jnp.int32(0), la, lb, W)
-    j0 = lo0 + offs
-    m0 = jnp.where(j0 == 0, 0.0, NEG)
-    ix0 = jnp.full((W,), NEG)
-    iy0 = jnp.where((j0 >= 1) & (j0 <= lb),
-                    -(go + (j0.astype(jnp.float32) - 1.0) * ge), NEG)
-    # End-cell capture init covers la == 0 (offset of j=lb is W//2 there).
-    cap0 = jnp.stack([m0[mid], ix0[mid], iy0[mid]])
-    h0 = jnp.where((j0 >= 0) & (j0 <= lb), jnp.maximum(m0, iy0), NEG)
     margin = jnp.max(sub)                  # one diagonal step of headroom
 
     def row_step(carry, inp):
         m_prev, ix_prev, iy_prev, lo_prev, cap, edge, hb_prev = carry
         a_i, i = inp                       # i: 1-based DP row
         lo_i = band_lo(i, la, lb, W)
-        s = lo_i - lo_prev                 # band slide (>= 0)
-        j = lo_i + offs                    # absolute columns this row
-
-        def shifted(v, sh, fill):
-            # value of prev-row vector at current offset o == prev o + sh
-            idx = offs + sh
-            ok = (idx >= 0) & (idx < W)
-            return jnp.where(ok, v[jnp.clip(idx, 0, W - 1)], fill)
-
-        h_prev = jnp.maximum(m_prev, jnp.maximum(ix_prev, iy_prev))
-        amax = jnp.where(m_prev >= h_prev, M_ST,
-                         jnp.where(ix_prev >= h_prev, IX_ST, IY_ST))
-        h_diag = shifted(h_prev, s - 1, NEG)
-        amax_diag = shifted(amax.astype(jnp.int32), s - 1, jnp.int32(M_ST))
-        m_up = shifted(m_prev, s, NEG)
-        ix_up = shifted(ix_prev, s, NEG)
-
-        s_row = sub[a_i.astype(jnp.int32),
-                    b[jnp.clip(j - 1, 0, m - 1)].astype(jnp.int32)]
-        in_mat = (j >= 1) & (j <= lb)
-        m_new = jnp.where(in_mat, h_diag + s_row, NEG)
-        dir_m = amax_diag
-
-        ix_open = m_up - go
-        ix_ext = ix_up - ge
-        ix_new = jnp.where((j >= 0) & (j <= lb),
-                           jnp.maximum(ix_open, ix_ext), NEG)
-        dir_ix = (ix_ext > ix_open).astype(jnp.int32)
-
-        # Iy running max within the row; band offsets stand in for absolute
-        # columns (the lo_i·ge term cancels exactly in f32 integer range).
-        cm = jax.lax.cummax(m_new + offs_f * ge)
-        iy_new = jnp.concatenate(
-            [jnp.full((1,), NEG), cm[:-1] - go - (offs_f[1:] - 1.0) * ge])
-        iy_new = jnp.where(in_mat, iy_new, NEG)
-        m_left = jnp.concatenate([jnp.full((1,), NEG), m_new[:-1]])
-        iy_left = jnp.concatenate([jnp.full((1,), NEG), iy_new[:-1]])
-        dir_iy = (iy_left - ge > m_left - go).astype(jnp.int32)
-
-        dirs = _pack(dir_m, dir_ix, dir_iy)
+        m_new, ix_new, iy_new, dirs, h_new, h_prev, s = band_row_update(
+            m_prev, ix_prev, iy_prev, a_i, b, lo_prev, lo_i, sub, go, ge, lb)
 
         hit = i == la                      # end cell (la, lb) sits at mid
         cap = jnp.where(hit, jnp.stack([m_new[mid], ix_new[mid],
@@ -153,22 +98,14 @@ def banded_forward(a, la, b, lb, sub, gap_open, gap_extend, *, band: int):
         # near-dominant path is fighting the band — a wider band could
         # beat this alignment, so flag the pair for full-DP fallback.
         live = i <= la
-        h_new = jnp.where((j >= 0) & (j <= lb),
-                          jnp.maximum(m_new, jnp.maximum(ix_new, iy_new)),
-                          NEG)
-        hb = jnp.max(h_new)
-        zone = (offs == 0) | (offs >= W - jnp.maximum(s, 1))
-        comp_cur = jnp.any(zone & (h_new >= hb - margin)) & (hb > NEG / 2)
-        # bottom-left exit: previous-row cells slid out of storage this row
-        comp_prev = (jnp.any((offs < s) & (h_prev >= hb_prev - margin)) &
-                     (hb_prev > NEG / 2))
-        edge = edge | (live & (comp_cur | comp_prev))
+        comp, hb = edge_pressure(h_new, h_prev, hb_prev, s, margin)
+        edge = edge | (live & comp)
         hb_prev = jnp.where(live, hb, hb_prev)
         return (m_new, ix_new, iy_new, lo_i, cap, edge, hb_prev), dirs
 
     rows_i = jnp.arange(1, n + 1, dtype=jnp.int32)
     (_, _, _, _, cap, edge, _), dirs = jax.lax.scan(
-        row_step, (m0, ix0, iy0, lo0, cap0, jnp.bool_(False), jnp.max(h0)),
+        row_step, (m0, ix0, iy0, lo0, cap0, jnp.bool_(False), hb0),
         (a, rows_i))
     st = jnp.argmax(cap).astype(jnp.int32)
     return BandedForward(dirs, cap[st], la, lb, st, edge)
@@ -191,48 +128,20 @@ def banded_traceback(a, b, fwd: BandedForward, gap_code: int, *, band: int):
         i, j, st, done, edge, oob, out_a, out_b, k = carry
         lo_i = band_lo(i, la, lb, W)
         o = j - lo_i
-        in_band = (o >= 0) & (o < W) & (i >= 1)
         byte_band = dirf[jnp.clip((i - 1) * W + o, 0, n * W - 1)].astype(
             jnp.int32)
-        # Boundary cells are pure gap runs with closed-form directions;
-        # they are not stored in the band (and for la==0 / lb==0 the whole
-        # walk happens here).
-        byte_row0 = FRESH | (jnp.where(j == 1, 0, 1) << 3)
-        byte_col0 = M_ST | (jnp.where(i == 1, 0, 1) << 2)
-        byte = jnp.where(i == 0, byte_row0,
-                         jnp.where(j == 0, byte_col0, byte_band))
-
-        interior = (i > 0) & (j > 0)
-        lost = (~done) & interior & (~in_band)
+        a_im1 = a[jnp.maximum(i - 1, 0)]
+        b_jm1 = b[jnp.maximum(j - 1, 0)]
+        ni, nj, nst, done, ndone, lost, edge_hit, ca, cb = trace_step_math(
+            i, j, o, st, done, byte_band, a_im1, b_jm1, lb, gap_code, W)
         oob = oob | lost
-        # Edge cells whose clipped neighbour would be a real DP cell mean
-        # a wider band could score higher: flag for full-DP fallback.
-        edge = edge | ((~done) & interior & in_band &
-                       ((o == 0) | ((o == W - 1) & (j < lb))))
-        done = done | lost
-
-        dir_m = byte & 3
-        dir_ix = (byte >> 2) & 1
-        dir_iy = (byte >> 3) & 1
-        is_m = st == M_ST
-        is_ix = st == IX_ST
-        ca = jnp.where(is_m | is_ix, a[jnp.maximum(i - 1, 0)],
-                       gap_code).astype(jnp.int8)
-        cb = jnp.where(is_m | (st == IY_ST), b[jnp.maximum(j - 1, 0)],
-                       gap_code).astype(jnp.int8)
+        edge = edge | edge_hit
         out_a = out_a.at[k].set(jnp.where(done, out_a[k], ca))
         out_b = out_b.at[k].set(jnp.where(done, out_b[k], cb))
-
-        ni = jnp.where(is_m | is_ix, i - 1, i)
-        nj = jnp.where(is_m | (st == IY_ST), j - 1, j)
-        nst = jnp.where(is_m, dir_m,
-                        jnp.where(is_ix, jnp.where(dir_ix == 1, IX_ST, M_ST),
-                                  jnp.where(dir_iy == 1, IY_ST, M_ST)))
-        ndone = done | ((ni == 0) & (nj == 0))
         k = jnp.where(done, k, k + 1)
         i = jnp.where(done, i, ni)
         j = jnp.where(done, j, nj)
-        st = jnp.where(done, st, nst.astype(jnp.int32))
+        st = jnp.where(done, st, nst)
         return (i, j, st, ndone, edge, oob, out_a, out_b, k)
 
     out_a = jnp.full((out_len,), gap_code, jnp.int8)

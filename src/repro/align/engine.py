@@ -4,11 +4,16 @@ The three historical alignment paths (the jnp scan oracle, the Pallas SW
 kernel, and the k-mer fallback re-alignment) dispatch through this
 engine. It owns:
 
-  * backend selection (``jnp`` | ``pallas`` | ``banded``, ``auto``
-    resolves per platform — see ``backends.resolve_backend``),
+  * backend selection (``jnp`` | ``pallas`` | ``banded`` |
+    ``banded-pallas``, ``auto`` resolves per platform — see
+    ``backends.resolve_backend``),
   * length-bucketed batching (``bucketing.bucket_plan``): each bucket
-    runs at its own power-of-two width instead of the global Lmax,
-  * the per-pair full-DP fallback shared by the ``banded`` backend
+    runs at its own power-of-two width instead of the global Lmax; with
+    ``band_policy="adaptive"`` the pairs path additionally buckets on
+    the pow2 band width each pair's length skew needs
+    (``bucketing.band_bucket_plan``), so banded kernels compile once
+    per W instead of overflowing thin bands into full-DP fallbacks,
+  * the per-pair full-DP fallback shared by the banded backends
     (band overflow) and the k-mer chaining path (chain failure) — the
     merge happens device-side, no host round-trip of the row buffers.
 
@@ -72,6 +77,7 @@ class AlignEngine:
     gap_code: int = 5
     backend: str = "auto"
     band: int = 64
+    band_policy: str = "fixed"   # "fixed" | "adaptive" (pairs path only)
     local: bool = False
     block_rows: int = 128
     interpret: Optional[bool] = None
@@ -81,9 +87,16 @@ class AlignEngine:
     def __post_init__(self):
         object.__setattr__(self, "backend",
                            backends.resolve_backend(self.backend))
-        if self.backend == "banded" and self.local:
+        if self._is_banded and self.local:
             # a diagonal band cannot host an anywhere-start local path
             object.__setattr__(self, "backend", "jnp")
+        if self.band_policy not in ("fixed", "adaptive"):
+            raise ValueError(f"unknown band_policy {self.band_policy!r}; "
+                             "expected 'fixed' or 'adaptive'")
+
+    @property
+    def _is_banded(self) -> bool:
+        return self.backend in ("banded", "banded-pallas")
 
     def batch_fn(self, *, local: Optional[bool] = None):
         """(Q, lens, b, lb) -> BatchAlignment, safe inside jit/shard_map.
@@ -94,7 +107,7 @@ class AlignEngine:
         """
         be = self.backend
         loc = self.local if local is None else local
-        if be == "banded" and loc:
+        if be in ("banded", "banded-pallas") and loc:
             be = "jnp"
 
         def fn(Q, lens, b, lb):
@@ -109,6 +122,12 @@ class AlignEngine:
                     Q, lens, b, lb, self.sub, gap_open=self.gap_open,
                     gap_extend=self.gap_extend, band=self.band,
                     gap_code=self.gap_code)
+            if be == "banded-pallas":
+                return backends.banded_pallas_align_batch(
+                    Q, lens, b, lb, self.sub, gap_open=self.gap_open,
+                    gap_extend=self.gap_extend, band=self.band,
+                    gap_code=self.gap_code, block_rows=self.block_rows,
+                    interpret=self.interpret)
             return backends.jnp_align_batch(
                 Q, lens, b, lb, self.sub, gap_open=self.gap_open,
                 gap_extend=self.gap_extend, local=loc,
@@ -192,19 +211,23 @@ class AlignEngine:
             aln_len = aln_len.at[ix].set(res.aln_len)
         return EngineResult(score, a_rows, b_rows, aln_len, len(bad))
 
-    def pairs_fn(self, *, local: Optional[bool] = None):
+    def pairs_fn(self, *, local: Optional[bool] = None,
+                 band: Optional[int] = None):
         """(Q, qlens, T, tlens) -> BatchAlignment with per-pair targets.
 
         The batch-entry primitive: every row carries its own target, so a
         single jitted call can serve pre-encoded requests from many
         callers — each request's center becomes that row's target
         (``repro.serve.queue`` builds such batches). Safe inside
-        jit/shard_map; ``local`` overrides as in ``batch_fn``.
+        jit/shard_map; ``local`` overrides as in ``batch_fn``; ``band``
+        overrides the engine band for one primitive (the adaptive band
+        planner builds one pairs_fn per bucket W).
         """
         be = self.backend
         loc = self.local if local is None else local
-        if be == "banded" and loc:
+        if be in ("banded", "banded-pallas") and loc:
             be = "jnp"
+        W = self.band if band is None else band
 
         def fn(Q, qlens, T, tlens):
             if be == "pallas":
@@ -216,8 +239,13 @@ class AlignEngine:
             if be == "banded":
                 return backends.banded_align_pairs(
                     Q, qlens, T, tlens, self.sub, gap_open=self.gap_open,
-                    gap_extend=self.gap_extend, band=self.band,
+                    gap_extend=self.gap_extend, band=W,
                     gap_code=self.gap_code)
+            if be == "banded-pallas":
+                return backends.banded_pallas_align_pairs(
+                    Q, qlens, T, tlens, self.sub, gap_open=self.gap_open,
+                    gap_extend=self.gap_extend, band=W,
+                    gap_code=self.gap_code, interpret=self.interpret)
             return backends.jnp_align_pairs(
                 Q, qlens, T, tlens, self.sub, gap_open=self.gap_open,
                 gap_extend=self.gap_extend, local=loc,
@@ -267,6 +295,34 @@ class AlignEngine:
             out = fn(Q, qlens, T, tlens)
             return self._apply_pairs_fallback(out, Q, qlens, T, tlens, P,
                                               n_calls=1)
+
+        if self.band_policy == "adaptive" and self._is_banded:
+            # Band-aware buckets: pairs sharing (wq, wt, W) share one
+            # jitted kernel instance; skewed pairs get a band wide enough
+            # to not overflow instead of a guaranteed full-DP fallback.
+            plan = bucketing.band_bucket_plan(
+                np.asarray(qlens), np.asarray(tlens), Lq, Lt,
+                band=self.band, min_bucket=self.min_bucket)
+            score = jnp.zeros((B,), jnp.float32)
+            a_rows = jnp.full((B, P), self.gap_code, jnp.int8)
+            b_rows = jnp.full((B, P), self.gap_code, jnp.int8)
+            aln_len = jnp.zeros((B,), jnp.int32)
+            ok = np.ones((B,), bool)
+            for wq, wt, W, idx in plan:
+                ix = jnp.asarray(idx)
+                out = self.pairs_fn(band=W)(Q[ix, :wq], qlens[ix],
+                                            T[ix, :wt], tlens[ix])
+                score = score.at[ix].set(out.score)
+                a_rows = a_rows.at[ix].set(
+                    _pad_cols(out.a_row, P, self.gap_code))
+                b_rows = b_rows.at[ix].set(
+                    _pad_cols(out.b_row, P, self.gap_code))
+                aln_len = aln_len.at[ix].set(out.aln_len)
+                ok[idx] = np.asarray(out.ok)
+            merged = backends.BatchAlignment(score, a_rows, b_rows, aln_len,
+                                             jnp.asarray(ok))
+            return self._apply_pairs_fallback(merged, Q, qlens, T, tlens, P,
+                                              n_calls=len(plan))
 
         plan = bucketing.pair_bucket_plan(np.asarray(qlens),
                                           np.asarray(tlens), Lq, Lt,

@@ -47,8 +47,9 @@ class MSAConfig:
     max_seg: int = 64                # inter-anchor DP budget
     center: str = "first"            # first | sampled
     local: bool = False              # Smith-Waterman local stage-1 alignment
-    backend: str = "auto"            # auto | jnp | pallas | banded (map(1) DP)
-    band: int = 64                   # band width for backend='banded'
+    backend: str = "auto"            # map(1) DP: auto | jnp | pallas |
+                                     #   banded | banded-pallas
+    band: int = 64                   # band width for the banded backends
     bucket: bool = True              # length-bucketed batching in map(1)
 
     def alpha(self) -> ab.Alphabet:

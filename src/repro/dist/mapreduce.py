@@ -6,7 +6,8 @@ Spark terms -> mesh terms:
   broadcast(center, index)   replicated operands (PartitionSpec())
   map(1)  align-to-center    jitted ``core.msa.kmer_align_batch`` /
                              a ``repro.align`` backend primitive per shard
-                             (jnp scan, Pallas SW kernel, or banded DP)
+                             (jnp scan, Pallas SW kernel, or banded DP —
+                             jnp or native Pallas)
   reduce(1) merge profiles   local columnwise max, then one ``pmax``
   map(2)  re-emit rows       ``core.centerstar.build_rows`` per shard
 
@@ -96,8 +97,9 @@ def distributed_center_star(mesh: Mesh, *, method: str, sub, gap_code: int,
     ``sharding.broadcast``; N must divide the data-axis size (``pad_rows``).
 
     ``backend`` picks the map(1) DP primitive from the ``repro.align``
-    registry (jnp scan / Pallas SW kernel / banded O(n·band) DP). The
-    banded backend accepts its result in-graph without the host driver's
+    registry (jnp scan / Pallas SW kernel / banded O(n·band) DP as a jnp
+    scan or the native ``banded-pallas`` wavefront kernel). The banded
+    backends accept their result in-graph without the host driver's
     per-pair overflow fallback — re-aligning in-graph would materialize
     the full direction matrix for every pair, exactly what banding is
     there to avoid; size the band for the workload instead.

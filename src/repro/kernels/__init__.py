@@ -1,7 +1,9 @@
-"""Pallas kernels (SW/Gotoh, distance, flash attention) + shared helpers."""
+"""Pallas kernels (SW/Gotoh, banded Gotoh, distance, flash attention) +
+shared helpers (`default_interpret`, `kernel_call`)."""
 from __future__ import annotations
 
 import jax
+from jax.experimental import pallas as pl
 
 
 def default_interpret(platform: str | None = None) -> bool:
@@ -16,4 +18,18 @@ def default_interpret(platform: str | None = None) -> bool:
     return p != "tpu"
 
 
-from . import sw, distance, flash_attention  # noqa: E402,F401
+def kernel_call(kernel_fn, *, interpret: bool | None = None, **pallas_kwargs):
+    """``pl.pallas_call`` with the package's interpret resolution built in.
+
+    Every ops-layer wrapper used to re-implement the same dance
+    (``default_interpret() if interpret is None else interpret``); this is
+    the one shared spelling. All other kwargs pass through to
+    ``pl.pallas_call`` untouched, and the return value is the usual
+    callable to apply to the kernel operands.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return pl.pallas_call(kernel_fn, interpret=interpret, **pallas_kwargs)
+
+
+from . import sw, banded, distance, flash_attention  # noqa: E402,F401

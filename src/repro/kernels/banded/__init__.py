@@ -1,0 +1,9 @@
+"""Banded Gotoh as native Pallas kernels: VMEM-resident (n, W) band,
+anti-diagonal wavefront rows, in-kernel overflow flags, and a fused
+score+traceback path for coalesced pairs. ``ref`` holds the pure shared
+recurrence that keeps these bit-identical to the jnp scan in
+``align.banded``."""
+from __future__ import annotations
+
+from . import ref  # noqa: F401
+from .ops import banded_forward_pallas, banded_pairs_fused  # noqa: F401

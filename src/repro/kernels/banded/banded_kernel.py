@@ -1,0 +1,280 @@
+"""Pallas TPU kernels: banded Gotoh forward + fused score-and-traceback.
+
+Two kernels over the same width-W band recurrence (``ref.band_row_update``
+— the function the jnp scan in ``align.banded`` also calls, which is what
+makes parity bit-identical rather than approximate):
+
+``_fwd_kernel`` — batch path. grid = (batch, row_blocks); the three band
+state vectors (M/Ix/Iy, each (W,) f32) live in VMEM scratch persisting
+across the sequential row-block dimension, rows advance as an
+anti-diagonal wavefront (all W band cells of a row are elementwise or
+cummax work on the VPU lanes), and HBM traffic per DP row is one (W,)
+int8 direction slab — O(n·W) instead of the SW kernel's O(n·m). The
+edge-pressure overflow detector runs in-kernel on the same row state, so
+the ``AlignEngine`` fallback contract needs no extra pass.
+
+``_fused_kernel`` — coalesced ``align_pairs`` path. grid = (batch,); one
+program owns a whole pair: the forward loop writes direction bytes into a
+(n, W) int8 VMEM scratch, then the traceback walks that scratch in the
+same program. The direction matrix never exists in HBM at all — per pair
+the kernel moves only the sequences in and (score row, two gapped rows)
+out, which is the strictly-fewer-HBM-bytes claim BENCH_kernels checks.
+
+TPU layout notes: W is a pow2 (band plans clamp to pow2; 128-lane tiles
+want W >= 128 for full lane use, smaller W still vectorizes via sublane
+packing); the band state is 3·W·4 B + (8,) stats, and the fused scratch
+adds n·W int8 — at n = 4096, W = 64 that is ~256 KiB, inside one core's
+VMEM. Under ``interpret=True`` (CPU CI) the same kernels run on the
+Pallas interpreter; scalar gathers and dynamic stores are exact there,
+just not fast — see docs/KERNELS.md for the caveats.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .. import kernel_call
+from ...core.pairwise import NEG
+from .ref import (band_lo, band_row_init, band_row_update, edge_pressure,
+                  trace_step_math)
+
+# stat scratch slots (f32): end-cell capture per Gotoh state, overflow
+# flag, and the previous live row's best score for edge pressure.
+_CAP_M, _CAP_IX, _CAP_IY, _EDGE, _HB = 0, 1, 2, 3, 4
+
+
+def _fwd_kernel(a_ref, b_ref, lens_ref, sub_ref, dirs_ref, out_ref,
+                mp, xp, yp, stat, *, band: int, block_rows: int,
+                gap_open: float, gap_extend: float):
+    W = band
+    mid = W // 2
+    rb = pl.program_id(1)
+    n_rb = pl.num_programs(1)
+    la = lens_ref[0, 0]
+    lb = lens_ref[0, 1]
+    b_row = b_ref[0, :]
+    sub = sub_ref[:]
+    go = jnp.float32(gap_open)
+    ge = jnp.float32(gap_extend)
+    margin = jnp.max(sub)
+
+    @pl.when(rb == 0)
+    def _init():
+        m0, ix0, iy0, cap0, hb0 = band_row_init(la, lb, go, ge, band=W)
+        mp[:] = m0
+        xp[:] = ix0
+        yp[:] = iy0
+        stat[_CAP_M] = cap0[0]
+        stat[_CAP_IX] = cap0[1]
+        stat[_CAP_IY] = cap0[2]
+        stat[_EDGE] = 0.0
+        stat[_HB] = hb0
+        stat[5:] = jnp.zeros((3,), jnp.float32)
+
+    def row(l, _):
+        r = rb * block_rows + l + 1          # DP row index (1-based)
+        a_i = a_ref[0, l]
+        lo_prev = band_lo(r - 1, la, lb, W)
+        lo_i = band_lo(r, la, lb, W)
+        m_new, ix_new, iy_new, dirs, h_new, h_prev, s = band_row_update(
+            mp[:], xp[:], yp[:], a_i, b_row, lo_prev, lo_i, sub, go, ge, lb)
+        dirs_ref[0, l, :] = dirs
+        # State advances unconditionally (the jnp scan does the same);
+        # rows past la only touch the dead padding tail.
+        mp[:] = m_new
+        xp[:] = ix_new
+        yp[:] = iy_new
+
+        hit = r == la                        # end cell (la, lb) sits at mid
+        stat[_CAP_M] = jnp.where(hit, m_new[mid], stat[_CAP_M])
+        stat[_CAP_IX] = jnp.where(hit, ix_new[mid], stat[_CAP_IX])
+        stat[_CAP_IY] = jnp.where(hit, iy_new[mid], stat[_CAP_IY])
+
+        live = r <= la
+        comp, hb = edge_pressure(h_new, h_prev, stat[_HB], s, margin)
+        stat[_EDGE] = jnp.where(live & comp, 1.0, stat[_EDGE])
+        stat[_HB] = jnp.where(live, hb, stat[_HB])
+        return 0
+
+    jax.lax.fori_loop(0, block_rows, row, 0)
+
+    @pl.when(rb == n_rb - 1)
+    def _fin():
+        ends = jnp.stack([stat[_CAP_M], stat[_CAP_IX], stat[_CAP_IY]])
+        st = jnp.argmax(ends)
+        out_ref[0, 0] = ends[st]
+        out_ref[0, 1] = la.astype(jnp.float32)
+        out_ref[0, 2] = lb.astype(jnp.float32)
+        out_ref[0, 3] = st.astype(jnp.float32)
+        out_ref[0, 4] = stat[_EDGE]
+        out_ref[0, 5:] = jnp.zeros((3,), jnp.float32)
+
+
+def banded_forward_kernel(a, b, lens, sub, *, gap_open: float,
+                          gap_extend: float, band: int,
+                          block_rows: int = 128,
+                          interpret: bool | None = None):
+    """a: (B, n) int8 (n % block_rows == 0), b: (B, m), lens: (B, 2) i32.
+
+    Returns dirs (B, n, band) int8 (DP rows 1..n) and out (B, 8) f32
+    [score, la, lb, start_state, edge, 0*3].
+    """
+    B, n = a.shape
+    m = b.shape[1]
+    assert n % block_rows == 0, (n, block_rows)
+    grid = (B, n // block_rows)
+    kern = functools.partial(_fwd_kernel, band=band, block_rows=block_rows,
+                             gap_open=gap_open, gap_extend=gap_extend)
+    return kernel_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_rows), lambda b_, r: (b_, r)),
+            pl.BlockSpec((1, m), lambda b_, r: (b_, 0)),
+            pl.BlockSpec((1, 2), lambda b_, r: (b_, 0)),
+            pl.BlockSpec(sub.shape, lambda b_, r: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_rows, band), lambda b_, r: (b_, r, 0)),
+            pl.BlockSpec((1, 8), lambda b_, r: (b_, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n, band), jnp.int8),
+            jax.ShapeDtypeStruct((B, 8), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((band,), jnp.float32),
+            pltpu.VMEM((band,), jnp.float32),
+            pltpu.VMEM((band,), jnp.float32),
+            pltpu.VMEM((8,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, b, lens, sub)
+
+
+def _fused_kernel(a_ref, b_ref, lens_ref, sub_ref, out_ref, ar_ref, br_ref,
+                  dirs_s, *, band: int, gap_open: float, gap_extend: float,
+                  gap_code: int):
+    W = band
+    mid = W // 2
+    n = a_ref.shape[1]
+    m = b_ref.shape[1]
+    out_len = n + m
+    la = lens_ref[0, 0]
+    lb = lens_ref[0, 1]
+    b_row = b_ref[0, :]
+    sub = sub_ref[:]
+    go = jnp.float32(gap_open)
+    ge = jnp.float32(gap_extend)
+    margin = jnp.max(sub)
+
+    # ---- forward: band state as loop carry, dirs into VMEM scratch ----
+    m0, ix0, iy0, cap0, hb0 = band_row_init(la, lb, go, ge, band=W)
+
+    def fwd_row(l, carry):
+        m_prev, ix_prev, iy_prev, cap, edge, hb_prev = carry
+        r = l + 1
+        a_i = a_ref[0, l]
+        lo_prev = band_lo(r - 1, la, lb, W)
+        lo_i = band_lo(r, la, lb, W)
+        m_new, ix_new, iy_new, dirs, h_new, h_prev, s = band_row_update(
+            m_prev, ix_prev, iy_prev, a_i, b_row, lo_prev, lo_i, sub,
+            go, ge, lb)
+        pl.store(dirs_s, (pl.dslice(l, 1), slice(None)), dirs[None, :])
+        hit = r == la
+        cap = jnp.where(hit, jnp.stack([m_new[mid], ix_new[mid],
+                                        iy_new[mid]]), cap)
+        live = r <= la
+        comp, hb = edge_pressure(h_new, h_prev, hb_prev, s, margin)
+        edge = edge | (live & comp)
+        hb_prev = jnp.where(live, hb, hb_prev)
+        return (m_new, ix_new, iy_new, cap, edge, hb_prev)
+
+    (_, _, _, cap, edge_fwd, _) = jax.lax.fori_loop(
+        0, n, fwd_row, (m0, ix0, iy0, cap0, jnp.bool_(False), hb0))
+    st0 = jnp.argmax(cap).astype(jnp.int32)
+    score = cap[st0]
+
+    # ---- traceback: walk the VMEM band, never touching HBM dirs ----
+    dirf = dirs_s[:].reshape(-1)
+
+    def tb_step(t, carry):
+        i, j, st, done, edge, oob, out_a, out_b, k = carry
+        lo_i = band_lo(i, la, lb, W)
+        o = j - lo_i
+        byte_band = dirf[jnp.clip((i - 1) * W + o, 0, n * W - 1)].astype(
+            jnp.int32)
+        a_im1 = a_ref[0, jnp.maximum(i - 1, 0)]
+        b_jm1 = b_ref[0, jnp.maximum(j - 1, 0)]
+        ni, nj, nst, done, ndone, lost, edge_hit, ca, cb = trace_step_math(
+            i, j, o, st, done, byte_band, a_im1, b_jm1, lb, gap_code, W)
+        oob = oob | lost
+        edge = edge | edge_hit
+        out_a = out_a.at[k].set(jnp.where(done, out_a[k], ca))
+        out_b = out_b.at[k].set(jnp.where(done, out_b[k], cb))
+        k = jnp.where(done, k, k + 1)
+        i = jnp.where(done, i, ni)
+        j = jnp.where(done, j, nj)
+        st = jnp.where(done, st, nst)
+        return (i, j, st, ndone, edge, oob, out_a, out_b, k)
+
+    out_a = jnp.full((out_len,), gap_code, jnp.int8)
+    out_b = jnp.full((out_len,), gap_code, jnp.int8)
+    init = (la, lb, st0, (la == 0) & (lb == 0),
+            jnp.bool_(False), jnp.bool_(False), out_a, out_b, jnp.int32(0))
+    (_, _, _, _, edge, oob, out_a, out_b, k) = jax.lax.fori_loop(
+        0, out_len, tb_step, init)
+
+    ok = (~edge) & (~oob) & (~edge_fwd) & (score > NEG / 2)
+    ar_ref[0, :] = jnp.roll(jnp.flip(out_a), k - out_len)
+    br_ref[0, :] = jnp.roll(jnp.flip(out_b), k - out_len)
+    out_ref[0, 0] = score
+    out_ref[0, 1] = la.astype(jnp.float32)
+    out_ref[0, 2] = lb.astype(jnp.float32)
+    out_ref[0, 3] = st0.astype(jnp.float32)
+    out_ref[0, 4] = k.astype(jnp.float32)
+    out_ref[0, 5] = ok.astype(jnp.float32)
+    out_ref[0, 6] = edge_fwd.astype(jnp.float32)
+    out_ref[0, 7] = 0.0
+
+
+def banded_fused_kernel(a, b, lens, sub, *, gap_open: float,
+                        gap_extend: float, band: int, gap_code: int = 5,
+                        interpret: bool | None = None):
+    """Fused banded score+traceback. a: (B, n) int8, b: (B, m), lens (B, 2).
+
+    Returns out (B, 8) f32 [score, la, lb, st, aln_len, ok, edge, 0] and
+    a_row/b_row (B, n+m) int8 — no direction matrix ever reaches HBM.
+    """
+    B, n = a.shape
+    m = b.shape[1]
+    kern = functools.partial(_fused_kernel, band=band, gap_open=gap_open,
+                             gap_extend=gap_extend, gap_code=gap_code)
+    return kernel_call(
+        kern,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda b_: (b_, 0)),
+            pl.BlockSpec((1, m), lambda b_: (b_, 0)),
+            pl.BlockSpec((1, 2), lambda b_: (b_, 0)),
+            pl.BlockSpec(sub.shape, lambda b_: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 8), lambda b_: (b_, 0)),
+            pl.BlockSpec((1, n + m), lambda b_: (b_, 0)),
+            pl.BlockSpec((1, n + m), lambda b_: (b_, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 8), jnp.float32),
+            jax.ShapeDtypeStruct((B, n + m), jnp.int8),
+            jax.ShapeDtypeStruct((B, n + m), jnp.int8),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n, band), jnp.int8),
+        ],
+        interpret=interpret,
+    )(a, b, lens, sub)

@@ -1,0 +1,63 @@
+"""jit'd public wrappers for the banded Gotoh Pallas kernels.
+
+``banded_forward_pallas`` pads the query axis to the row-block size and
+returns a batched ``BandedForward`` — drop-in for vmapped
+``align.banded.banded_forward`` (the jnp traceback then consumes the HBM
+dirs exactly as before). ``banded_pairs_fused`` is the whole map(1) in
+one kernel: scores, gapped rows, lengths, and the ok flag come back with
+no direction matrix ever materialized in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .banded_kernel import banded_forward_kernel, banded_fused_kernel
+from .ref import BandedForward
+
+
+@functools.partial(jax.jit, static_argnames=("gap_open", "gap_extend",
+                                             "band", "block_rows",
+                                             "interpret"))
+def banded_forward_pallas(a, b, lens, sub, *, gap_open, gap_extend, band,
+                          block_rows: int = 128,
+                          interpret: bool | None = None) -> BandedForward:
+    """Batched banded forward. a: (B, n) int8, b: (B, m), lens: (B, 2) i32.
+
+    Returns BandedForward with batched leaves: dirs (B, n, band) int8,
+    score/edge (B,), start_* (B,) i32. ``interpret=None`` resolves
+    platform-aware (compiled on TPU, interpreter elsewhere).
+    """
+    B, n = a.shape
+    npad = (-n) % block_rows
+    a = jnp.pad(a, ((0, 0), (0, npad)))
+    dirs, out = banded_forward_kernel(
+        a, b, lens, sub.astype(jnp.float32), gap_open=float(gap_open),
+        gap_extend=float(gap_extend), band=band, block_rows=block_rows,
+        interpret=interpret)
+    return BandedForward(dirs[:, :n, :], out[:, 0],
+                         out[:, 1].astype(jnp.int32),
+                         out[:, 2].astype(jnp.int32),
+                         out[:, 3].astype(jnp.int32),
+                         out[:, 4] > 0.5)
+
+
+@functools.partial(jax.jit, static_argnames=("gap_open", "gap_extend",
+                                             "band", "gap_code",
+                                             "interpret"))
+def banded_pairs_fused(a, b, lens, sub, *, gap_open, gap_extend, band,
+                       gap_code: int = 5, interpret: bool | None = None):
+    """Fused banded score+traceback for a coalesced pairs bucket.
+
+    a: (B, n) int8, b: (B, m) int8, lens: (B, 2) i32. Returns
+    (score (B,) f32, a_row (B, n+m) int8, b_row (B, n+m) int8,
+    aln_len (B,) i32, ok (B,) bool) — the BatchAlignment field order.
+    """
+    out, a_row, b_row = banded_fused_kernel(
+        a, b, lens, sub.astype(jnp.float32), gap_open=float(gap_open),
+        gap_extend=float(gap_extend), band=band, gap_code=gap_code,
+        interpret=interpret)
+    return (out[:, 0], a_row, b_row, out[:, 4].astype(jnp.int32),
+            out[:, 5] > 0.5)

@@ -1,0 +1,178 @@
+"""The banded Gotoh recurrence as pure shared math.
+
+These functions are THE band recurrence: ``align.banded`` scans them on
+the jnp path and ``banded_kernel``/``fused_kernel`` call them per row
+with VMEM-resident state, so the two implementations are bit-identical
+by construction (same op order, same dtypes, same NEG boundary). They
+depend only on ``core.pairwise`` constants — no align imports — so the
+kernel package never cycles back into the backend registry.
+
+Band geometry and the edge-pressure overflow heuristic are documented in
+``align/banded.py`` (the module docstring is the spec) and
+``docs/KERNELS.md`` (the kernel-schedule view).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ...core.pairwise import NEG, M_ST, IX_ST, IY_ST, FRESH, _pack
+
+
+class BandedForward(NamedTuple):
+    dirs: jnp.ndarray       # (n, W) int8 packed bytes for DP rows 1..n
+    score: jnp.ndarray      # f32 global score at (la, lb)
+    start_i: jnp.ndarray    # i32 == la
+    start_j: jnp.ndarray    # i32 == lb
+    start_state: jnp.ndarray
+    edge: jnp.ndarray       # bool: some row's best cell hit the band edge
+
+
+def band_lo(i, la, lb, band: int):
+    """Leftmost absolute column stored for DP row ``i``."""
+    c = jnp.where(la == 0, lb, (i * lb) // jnp.maximum(la, 1))
+    return (c - band // 2).astype(jnp.int32)
+
+
+def band_row_init(la, lb, go, ge, *, band: int):
+    """Row-0 band state (m0, ix0, iy0), end-cell capture, and row best."""
+    W = band
+    offs = jnp.arange(W, dtype=jnp.int32)
+    mid = W // 2
+    lo0 = band_lo(jnp.int32(0), la, lb, W)
+    j0 = lo0 + offs
+    m0 = jnp.where(j0 == 0, 0.0, NEG)
+    ix0 = jnp.full((W,), NEG)
+    iy0 = jnp.where((j0 >= 1) & (j0 <= lb),
+                    -(go + (j0.astype(jnp.float32) - 1.0) * ge), NEG)
+    # End-cell capture init covers la == 0 (offset of j=lb is W//2 there).
+    cap0 = jnp.stack([m0[mid], ix0[mid], iy0[mid]])
+    h0 = jnp.where((j0 >= 0) & (j0 <= lb), jnp.maximum(m0, iy0), NEG)
+    return m0, ix0, iy0, cap0, jnp.max(h0)
+
+
+def band_row_update(m_prev, ix_prev, iy_prev, a_i, b, lo_prev, lo_i,
+                    sub, go, ge, lb):
+    """One banded Gotoh DP row — the pure recurrence.
+
+    Within a row every dependency is elementwise or a running max (Iy
+    via cummax), so the W band cells advance together as one
+    anti-diagonal wavefront on the vector lanes.
+
+    Returns (m_new, ix_new, iy_new, dirs, h_new, h_prev, s) where
+    ``h_new``/``h_prev``/``s`` feed the edge-pressure detector.
+    """
+    W = m_prev.shape[0]
+    m = b.shape[0]
+    offs = jnp.arange(W, dtype=jnp.int32)
+    offs_f = offs.astype(jnp.float32)
+    s = lo_i - lo_prev                 # band slide (>= 0)
+    j = lo_i + offs                    # absolute columns this row
+
+    def shifted(v, sh, fill):
+        # value of prev-row vector at current offset o == prev o + sh
+        idx = offs + sh
+        ok = (idx >= 0) & (idx < W)
+        return jnp.where(ok, v[jnp.clip(idx, 0, W - 1)], fill)
+
+    h_prev = jnp.maximum(m_prev, jnp.maximum(ix_prev, iy_prev))
+    amax = jnp.where(m_prev >= h_prev, M_ST,
+                     jnp.where(ix_prev >= h_prev, IX_ST, IY_ST))
+    h_diag = shifted(h_prev, s - 1, NEG)
+    amax_diag = shifted(amax.astype(jnp.int32), s - 1, jnp.int32(M_ST))
+    m_up = shifted(m_prev, s, NEG)
+    ix_up = shifted(ix_prev, s, NEG)
+
+    s_row = sub[a_i.astype(jnp.int32),
+                b[jnp.clip(j - 1, 0, m - 1)].astype(jnp.int32)]
+    in_mat = (j >= 1) & (j <= lb)
+    m_new = jnp.where(in_mat, h_diag + s_row, NEG)
+    dir_m = amax_diag
+
+    ix_open = m_up - go
+    ix_ext = ix_up - ge
+    ix_new = jnp.where((j >= 0) & (j <= lb),
+                       jnp.maximum(ix_open, ix_ext), NEG)
+    dir_ix = (ix_ext > ix_open).astype(jnp.int32)
+
+    # Iy running max within the row; band offsets stand in for absolute
+    # columns (the lo_i·ge term cancels exactly in f32 integer range).
+    cm = jax.lax.cummax(m_new + offs_f * ge)
+    iy_new = jnp.concatenate(
+        [jnp.full((1,), NEG), cm[:-1] - go - (offs_f[1:] - 1.0) * ge])
+    iy_new = jnp.where(in_mat, iy_new, NEG)
+    m_left = jnp.concatenate([jnp.full((1,), NEG), m_new[:-1]])
+    iy_left = jnp.concatenate([jnp.full((1,), NEG), iy_new[:-1]])
+    dir_iy = (iy_left - ge > m_left - go).astype(jnp.int32)
+
+    dirs = _pack(dir_m, dir_ix, dir_iy)
+    h_new = jnp.where((j >= 0) & (j <= lb),
+                      jnp.maximum(m_new, jnp.maximum(ix_new, iy_new)),
+                      NEG)
+    return m_new, ix_new, iy_new, dirs, h_new, h_prev, s
+
+
+def edge_pressure(h_new, h_prev, hb_prev, s, margin):
+    """Band-overflow detector for one row (see ``align/banded.py``).
+
+    A competitive cell (within ``margin`` of the row best) in an exit
+    zone — offset 0, the slide-clipped right rim, or a previous-row cell
+    about to slide out of storage — means a near-dominant path is
+    fighting the band. Returns (comp, hb): flag this row + the row best.
+    """
+    W = h_new.shape[0]
+    offs = jnp.arange(W, dtype=jnp.int32)
+    hb = jnp.max(h_new)
+    zone = (offs == 0) | (offs >= W - jnp.maximum(s, 1))
+    comp_cur = jnp.any(zone & (h_new >= hb - margin)) & (hb > NEG / 2)
+    # bottom-left exit: previous-row cells slid out of storage this row
+    comp_prev = (jnp.any((offs < s) & (h_prev >= hb_prev - margin)) &
+                 (hb_prev > NEG / 2))
+    return comp_cur | comp_prev, hb
+
+
+def trace_step_math(i, j, o, st, done, byte_band, a_im1, b_jm1, lb,
+                    gap_code: int, band: int):
+    """One traceback step — the pure walk logic.
+
+    The caller fetches the band direction byte and the two sequence
+    characters (HBM dirs on the jnp path, VMEM dirs in the fused
+    kernel); this function decides the move. Returns
+    (ni, nj, nst, done, ndone, lost, edge_hit, ca, cb) where ``done`` is
+    the post-``lost`` write gate for this step and ``ndone`` the carry.
+    """
+    W = band
+    in_band = (o >= 0) & (o < W) & (i >= 1)
+    # Boundary cells are pure gap runs with closed-form directions;
+    # they are not stored in the band (and for la==0 / lb==0 the whole
+    # walk happens here).
+    byte_row0 = FRESH | (jnp.where(j == 1, 0, 1) << 3)
+    byte_col0 = M_ST | (jnp.where(i == 1, 0, 1) << 2)
+    byte = jnp.where(i == 0, byte_row0,
+                     jnp.where(j == 0, byte_col0, byte_band))
+
+    interior = (i > 0) & (j > 0)
+    lost = (~done) & interior & (~in_band)
+    # Edge cells whose clipped neighbour would be a real DP cell mean
+    # a wider band could score higher: flag for full-DP fallback.
+    edge_hit = ((~done) & interior & in_band &
+                ((o == 0) | ((o == W - 1) & (j < lb))))
+    done = done | lost
+
+    dir_m = byte & 3
+    dir_ix = (byte >> 2) & 1
+    dir_iy = (byte >> 3) & 1
+    is_m = st == M_ST
+    is_ix = st == IX_ST
+    ca = jnp.where(is_m | is_ix, a_im1, gap_code).astype(jnp.int8)
+    cb = jnp.where(is_m | (st == IY_ST), b_jm1, gap_code).astype(jnp.int8)
+
+    ni = jnp.where(is_m | is_ix, i - 1, i)
+    nj = jnp.where(is_m | (st == IY_ST), j - 1, j)
+    nst = jnp.where(is_m, dir_m,
+                    jnp.where(is_ix, jnp.where(dir_ix == 1, IX_ST, M_ST),
+                              jnp.where(dir_iy == 1, IY_ST, M_ST)))
+    ndone = done | ((ni == 0) & (nj == 0))
+    return ni, nj, nst.astype(jnp.int32), done, ndone, lost, edge_hit, ca, cb

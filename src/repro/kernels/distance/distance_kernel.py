@@ -8,12 +8,18 @@ HBM would multiply sequence bytes by 4*|alphabet|. This kernel builds the
 one-hot tiles in VMEM from the int8 tiles at use time, so HBM traffic stays
 int8 while the MXU does the counting.
 
+Profile packing (``pack``): the default ``"int8"`` keeps the one-hot tiles
+as int8 operands of an int32-accumulating dot — 4× fewer VMEM bytes per
+expanded tile than the legacy ``"f32"`` path (BN*BL*C bytes instead of
+BN*BL*C*4; 128*128*8 = 128 KiB at C=8) and the layout the MXU's integer
+path wants. Counts are exact small integers either way, so the f32 results
+the ops layer returns are bit-identical between packings.
+
 Tiling: grid (N/BN, N/BN, L/BL); A-tile (BN, BL) int8 and B-tile (BN, BL)
-int8 expand to (BN, BL*C) f32 in VMEM (~BN*BL*C*4 B; 128*128*8*4 = 512 KiB
-for C=8 — fits) and accumulate two (BN, BN) f32 outputs over the L/BL
-reduction dimension (last grid dim = sequential on TPU, accumulation in the
-output block is the standard Pallas matmul pattern). MXU dims: BN=128 rows,
-BL*C a multiple of 128 lanes.
+int8 expand to (BN, BL*C) in VMEM and accumulate two (BN, BN) outputs over
+the L/BL reduction dimension (last grid dim = sequential on TPU,
+accumulation in the output block is the standard Pallas matmul pattern).
+MXU dims: BN=128 rows, BL*C a multiple of 128 lanes.
 """
 from __future__ import annotations
 
@@ -23,9 +29,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .. import kernel_call
 
-def _kernel(a_ref, b_ref, match_ref, valid_ref, *, n_chars: int, gap_code: int):
+
+def _kernel(a_ref, b_ref, match_ref, valid_ref, *, n_chars: int,
+            gap_code: int, pack: str):
     lk = pl.program_id(2)
+    op_t = jnp.int8 if pack == "int8" else jnp.float32
+    acc_t = jnp.int32 if pack == "int8" else jnp.float32
 
     @pl.when(lk == 0)
     def _():
@@ -38,29 +49,34 @@ def _kernel(a_ref, b_ref, match_ref, valid_ref, *, n_chars: int, gap_code: int):
     def onehot(x):
         oh = (x[:, :, None] == jax.lax.broadcasted_iota(jnp.int8, (1, 1, n_chars), 2))
         oh &= (x[:, :, None] != gap_code)
-        return oh.astype(jnp.float32).reshape(x.shape[0], -1)
+        return oh.astype(op_t).reshape(x.shape[0], -1)
 
-    na = ((a != gap_code) & (a < n_chars)).astype(jnp.float32)
-    nb = ((b != gap_code) & (b < n_chars)).astype(jnp.float32)
+    na = ((a != gap_code) & (a < n_chars)).astype(op_t)
+    nb = ((b != gap_code) & (b < n_chars)).astype(op_t)
     valid_ref[:, :] += jax.lax.dot_general(
-        na, nb, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+        na, nb, (((1,), (1,)), ((), ())), preferred_element_type=acc_t)
     match_ref[:, :] += jax.lax.dot_general(
         onehot(a), onehot(b), (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)
+        preferred_element_type=acc_t)
 
 
 def match_valid_kernel(msa_a, msa_b, *, n_chars: int, gap_code: int,
-                       bn: int = 128, bl: int = 128, interpret: bool = True):
+                       bn: int = 128, bl: int = 128, pack: str = "int8",
+                       interpret: bool | None = None):
     """msa_a: (N, L) int8, msa_b: (M, L) int8 (pad N/M to bn, L to bl).
 
-    Returns match (N, M) f32 and valid (N, M) f32.
+    Returns match (N, M) and valid (N, M) — int32 counts under
+    ``pack="int8"``, f32 under the legacy ``pack="f32"``.
     """
     N, L = msa_a.shape
     M = msa_b.shape[0]
     assert N % bn == 0 and M % bn == 0 and L % bl == 0, (N, M, L, bn, bl)
+    assert pack in ("int8", "f32"), pack
+    acc_t = jnp.int32 if pack == "int8" else jnp.float32
     grid = (N // bn, M // bn, L // bl)
-    kern = functools.partial(_kernel, n_chars=n_chars, gap_code=gap_code)
-    return pl.pallas_call(
+    kern = functools.partial(_kernel, n_chars=n_chars, gap_code=gap_code,
+                             pack=pack)
+    return kernel_call(
         kern,
         grid=grid,
         in_specs=[
@@ -72,8 +88,8 @@ def match_valid_kernel(msa_a, msa_b, *, n_chars: int, gap_code: int,
             pl.BlockSpec((bn, bn), lambda i, j, k: (i, j)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((N, M), jnp.float32),
-            jax.ShapeDtypeStruct((N, M), jnp.float32),
+            jax.ShapeDtypeStruct((N, M), acc_t),
+            jax.ShapeDtypeStruct((N, M), acc_t),
         ],
         interpret=interpret,
     )(msa_a, msa_b)

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .. import kernel_call
+
 NEG_INF = -1.0e30
 
 
@@ -84,7 +86,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 def flash_attention_kernel(q, k, v, *, scale: float, causal: bool,
                            window: int = 0, bq: int = 128, bk: int = 128,
-                           interpret: bool = True):
+                           interpret: bool | None = None):
     """q: (B, H, S, D), k/v: (B, KH, S, D) with H % KH == 0. S % bq == 0."""
     B, H, S, D = q.shape
     KH = k.shape[1]
@@ -93,7 +95,7 @@ def flash_attention_kernel(q, k, v, *, scale: float, causal: bool,
     grid = (B, H, S // bq, S // bk)
     kern = functools.partial(_kernel, bq=bq, bk=bk, scale=scale,
                              causal=causal, window=window)
-    return pl.pallas_call(
+    return kernel_call(
         kern,
         grid=grid,
         in_specs=[

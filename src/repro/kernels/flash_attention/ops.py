@@ -12,7 +12,6 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .. import default_interpret
 from .flash_kernel import flash_attention_kernel
 from .ref import attention_ref
 
@@ -22,8 +21,7 @@ def flash_attention(q, k, v, scale, causal=True, window=0, bq=128, bk=128,
                     interpret=None):
     return flash_attention_kernel(q, k, v, scale=scale, causal=causal,
                                   window=window, bq=bq, bk=bk,
-                                  interpret=default_interpret()
-                                  if interpret is None else interpret)
+                                  interpret=interpret)
 
 
 def _fwd(q, k, v, scale, causal, window, bq, bk, interpret):

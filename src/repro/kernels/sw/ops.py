@@ -7,7 +7,6 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .. import default_interpret
 from ...core.pairwise import ForwardResult
 from . import ref as _ref
 from .sw_kernel import gotoh_forward_kernel
@@ -22,10 +21,9 @@ def gotoh_forward_pallas(a, b, lens, sub, *, gap_open, gap_extend,
     boundary row prepended so core.pairwise.traceback consumes it directly.
 
     a: (B, n) int8, b: (B, m) int8, lens: (B, 2) i32 [[la, lb], ...].
-    ``interpret=None`` resolves platform-aware (compiled on TPU).
+    ``interpret=None`` resolves platform-aware (compiled on TPU) inside
+    the shared ``kernels.kernel_call`` wrapper.
     """
-    if interpret is None:
-        interpret = default_interpret()
     B, n = a.shape
     m = b.shape[1]
     npad = (-n) % block_rows

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .. import kernel_call
 from ...core.pairwise import NEG, M_ST, IX_ST, IY_ST, FRESH
 
 
@@ -138,7 +139,8 @@ def _kernel(a_ref, b_ref, lens_ref, sub_ref, dirs_ref, out_ref,
 
 def gotoh_forward_kernel(a, b, lens, sub, *, gap_open: float,
                          gap_extend: float, local: bool,
-                         block_rows: int = 128, interpret: bool = True):
+                         block_rows: int = 128,
+                         interpret: bool | None = None):
     """a: (B, n) int8 (n % block_rows == 0), b: (B, m), lens: (B, 2) i32.
 
     Returns dirs_body (B, n, m+1) int8 (DP rows 1..n) and out (B, 8) f32
@@ -150,7 +152,7 @@ def gotoh_forward_kernel(a, b, lens, sub, *, gap_open: float,
     grid = (B, n // block_rows)
     kern = functools.partial(_kernel, block_rows=block_rows, local=local,
                              gap_open=gap_open, gap_extend=gap_extend)
-    return pl.pallas_call(
+    return kernel_call(
         kern,
         grid=grid,
         in_specs=[

@@ -74,10 +74,11 @@ def build_parser() -> argparse.ArgumentParser:
                          "report (DNA/RNA only)")
     ap.add_argument("--k", type=int, default=11)
     ap.add_argument("--backend", default="auto",
-                    choices=["auto", "jnp", "pallas", "banded"],
+                    choices=["auto", "jnp", "pallas", "banded",
+                             "banded-pallas"],
                     help="map(1) DP backend (repro.align registry)")
     ap.add_argument("--band", type=int, default=64,
-                    help="band width for --backend banded (O(n*band) "
+                    help="band width for the banded backends (O(n*band) "
                          "direction memory; overflows fall back per pair)")
     ap.add_argument("--dist", action="store_true",
                     help="run the shard_map pipeline (repro.dist.mapreduce)")

@@ -75,10 +75,11 @@ def build_parser() -> argparse.ArgumentParser:
                     help="rescoring mode: local Smith-Waterman or global "
                          "Gotoh")
     ap.add_argument("--backend", default="auto",
-                    choices=["auto", "jnp", "pallas", "banded"],
+                    choices=["auto", "jnp", "pallas", "banded",
+                             "banded-pallas"],
                     help="rescoring DP backend (repro.align registry)")
     ap.add_argument("--band", type=int, default=64,
-                    help="band width for --backend banded")
+                    help="band width for the banded backends")
     ap.add_argument("--exhaustive", action="store_true",
                     help="skip the seed prefilter and rescore every "
                          "(query, DB) pair — the recall oracle")

@@ -64,10 +64,11 @@ def build_parser() -> argparse.ArgumentParser:
                     choices=["plain", "sw", "kmer"],
                     help="map(1) path; kmer requests run uncoalesced")
     ap.add_argument("--backend", default="auto",
-                    choices=["auto", "jnp", "pallas", "banded"],
+                    choices=["auto", "jnp", "pallas", "banded",
+                             "banded-pallas"],
                     help="map(1) DP backend (repro.align registry)")
     ap.add_argument("--band", type=int, default=64,
-                    help="band width for --backend banded")
+                    help="band width for the banded backends")
     ap.add_argument("--k", type=int, default=11, help="k-mer width")
     ap.add_argument("--center", default="first",
                     choices=["first", "sampled"],

@@ -27,6 +27,9 @@ def _run_backend(name, Q, lens, b, lb, sub, go, ge, band):
     kw = dict(gap_open=go, gap_extend=ge, gap_code=5)
     if name == "banded":
         return be.banded_align_batch(Q, lens, b, lb, sub, band=band, **kw)
+    if name == "banded-pallas":
+        return be.banded_pallas_align_batch(Q, lens, b, lb, sub, band=band,
+                                            **kw)
     if name == "pallas":
         return be.pallas_align_batch(Q, lens, b, lb, sub, block_rows=32, **kw)
     return be.jnp_align_batch(Q, lens, b, lb, sub, **kw)
@@ -44,7 +47,7 @@ def test_backend_parity(alphabet, go, ge, lb):
     Q, lens, b = _random_case(B, n, m, n_chars)
     band = 2 * m + 4                       # full column coverage: exact DP
     ref = _run_backend("jnp", Q, lens, b, jnp.int32(lb), sub, go, ge, band)
-    for name in ("pallas", "banded"):
+    for name in ("pallas", "banded", "banded-pallas"):
         got = _run_backend(name, Q, lens, b, jnp.int32(lb), sub, go, ge, band)
         np.testing.assert_array_equal(np.asarray(ref.score),
                                       np.asarray(got.score), err_msg=name)
@@ -74,7 +77,7 @@ def test_backend_parity_random_sweep():
         band = 2 * m + 4
         outs = {name: _run_backend(name, Q, lens, b, lb, sub, go, ge, band)
                 for name in BACKENDS}
-        for name in ("pallas", "banded"):
+        for name in ("pallas", "banded", "banded-pallas"):
             np.testing.assert_array_equal(
                 np.asarray(outs["jnp"].score), np.asarray(outs[name].score),
                 err_msg=f"trial {trial} {name}")
@@ -235,7 +238,7 @@ def test_msa_through_backends():
         for _ in range(2):
             s[r.integers(0, len(s))] = "ACGT"[r.integers(0, 4)]
         fam.append("".join(s))
-    for backend in ("jnp", "pallas", "banded"):
+    for backend in ("jnp", "pallas", "banded", "banded-pallas"):
         cfg = MSAConfig(method="plain", backend=backend, band=144)
         res = center_star_msa(fam, cfg)
         rows = decode_msa(res.msa, cfg)
@@ -299,6 +302,69 @@ def test_dist_mapreduce_banded_backend():
 
 def test_local_routes_away_from_banded():
     sub = ab.dna_matrix().astype(jnp.float32)
-    eng = AlignEngine(sub, gap_open=3, gap_extend=1, backend="banded",
-                      local=True)
-    assert eng.backend == "jnp"
+    for backend in ("banded", "banded-pallas"):
+        eng = AlignEngine(sub, gap_open=3, gap_extend=1, backend=backend,
+                          local=True)
+        assert eng.backend == "jnp"
+
+
+def test_band_bucket_plan_shares_same_width_pairs():
+    """Pairs with the same pow2 shapes AND band requirement share one
+    bucket; wildly skewed pairs get a wider W instead of a fallback."""
+    from repro.align.bucketing import band_bucket_plan
+    qlens = np.array([29, 31, 32, 30, 100, 4], np.int32)
+    tlens = np.array([30, 30, 30, 29, 10, 120], np.int32)
+    plan = band_bucket_plan(qlens, tlens, 128, 128, band=8, min_bucket=16)
+    covered = np.concatenate([ix for *_, ix in plan])
+    assert sorted(covered.tolist()) == list(range(6))
+    for wq, wt, W, ix in plan:
+        assert W & (W - 1) == 0                       # pow2
+        assert (qlens[ix] <= wq).all() and (tlens[ix] <= wt).all()
+        # W covers the skew of every member pair, unless it was clamped
+        # to full column coverage (where the band is exact regardless)
+        assert W >= 2 * wt + 2 or \
+            (np.abs(qlens[ix] - tlens[ix]) + 2 <= W).all()
+        assert W <= 1 << int(np.ceil(np.log2(2 * wt + 2)))
+    # the four similar-length pairs share one bucket (one kernel instance)
+    sizes = sorted(len(ix) for *_, ix in plan)
+    assert sizes[-1] >= 4
+    assert band_bucket_plan([], [], 8, 8, band=8) == []
+
+
+@pytest.mark.parametrize("backend", ["banded", "banded-pallas"])
+def test_adaptive_band_policy_avoids_fallbacks(backend):
+    """band_policy='adaptive' widens the band per skew bucket: strictly
+    fewer full-DP fallbacks than a fixed thin band (skew-driven overflow
+    is designed away; random-walk overflow can remain), and the merged
+    result matches the jnp oracle exactly."""
+    rng = np.random.default_rng(21)
+    B, n = 12, 96
+    Q = jnp.asarray(rng.integers(0, 4, (B, n)).astype(np.int8))
+    T = jnp.asarray(rng.integers(0, 4, (B, n)).astype(np.int8))
+    qlens = jnp.asarray(rng.integers(1, n + 1, B).astype(np.int32))
+    tlens = jnp.asarray(rng.integers(1, n + 1, B).astype(np.int32))
+    sub = ab.dna_matrix().astype(jnp.float32)
+    kw = dict(gap_open=3, gap_extend=1, gap_code=5, band=8)
+    ref = AlignEngine(sub, backend="jnp", **kw).align_pairs(
+        Q, qlens, T, tlens)
+    fixed = AlignEngine(sub, backend=backend, band_policy="fixed",
+                        **kw).align_pairs(Q, qlens, T, tlens)
+    adapt = AlignEngine(sub, backend=backend, band_policy="adaptive",
+                        **kw).align_pairs(Q, qlens, T, tlens)
+    assert fixed.n_fallback > 0          # band=8 is genuinely too thin
+    assert adapt.n_fallback < fixed.n_fallback
+    np.testing.assert_array_equal(np.asarray(adapt.score),
+                                  np.asarray(ref.score))
+    np.testing.assert_array_equal(np.asarray(adapt.aln_len),
+                                  np.asarray(ref.aln_len))
+    for i in range(B):
+        k = int(ref.aln_len[i])
+        np.testing.assert_array_equal(np.asarray(adapt.a_row[i])[:k],
+                                      np.asarray(ref.a_row[i])[:k])
+
+
+def test_band_policy_validated():
+    sub = ab.dna_matrix().astype(jnp.float32)
+    with pytest.raises(ValueError, match="band_policy"):
+        AlignEngine(sub, gap_open=3, gap_extend=1, backend="banded",
+                    band_policy="wide")
