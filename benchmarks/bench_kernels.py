@@ -122,8 +122,13 @@ def check_against_baseline(rows, baseline_path: Path = BASELINE,
     baseline yet); vanished rows fail (coverage loss is a regression)."""
     if not baseline_path.exists():
         return [f"no baseline at {baseline_path} (run --write-baseline)"]
+    recorded = json.loads(baseline_path.read_text())
+    if isinstance(recorded, dict):
+        # a BENCH_kernels.json artifact ({"rows": ..., "metrics": ...})
+        # recorded as the baseline works too
+        recorded = recorded["rows"]
     base = {tuple(map(tuple, k)): v for k, v in
-            (( _key(r), r) for r in json.loads(baseline_path.read_text()))}
+            ((_key(r), r) for r in recorded)}
     cur = {_key(r): r for r in rows}
     failures = []
     for k, b in base.items():

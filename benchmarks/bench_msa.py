@@ -108,6 +108,36 @@ def backend_matrix(smoke: bool = False):
                  f"fallback={res.n_fallback}")
 
 
+def obs_overhead_row(smoke: bool = False, repeats: int = 5):
+    """Instrumentation guardrail (ISSUE 8): the obs-enabled backend-matrix
+    path must cost < 3% over ``repro.obs.disabled()`` (plus a small
+    absolute floor so sub-second smoke runs don't flake on timer noise).
+    """
+    import repro.obs as obs
+
+    n, length = (6, 96) if smoke else (12, 512)
+    fam = _family(n, length, seed=2)
+    cfg = MSAConfig(method="plain", backend="jnp")
+    _run(fam.seqs, cfg, ab.DNA)          # warm: compile every bucket
+
+    def median_s():
+        times = sorted(_run(fam.seqs, cfg, ab.DNA)[0] for _ in range(repeats))
+        return times[repeats // 2] / 1e6
+
+    with obs.disabled():
+        off_s = median_s()
+    on_s = median_s()
+    ratio = on_s / off_s
+    emit("bench/msa/obs_overhead", on_s * 1e6,
+         f"off_us={off_s * 1e6:.1f};ratio={ratio:.3f}")
+    budget = off_s * 1.03 + 0.025
+    if on_s > budget:
+        raise SystemExit(
+            f"obs overhead guardrail failed: enabled {on_s * 1e3:.1f}ms > "
+            f"disabled {off_s * 1e3:.1f}ms * 1.03 + 25ms")
+    return ratio
+
+
 def linear_scaling_in_n():
     """HAlign-II's O(n) scaling in sequence count for fixed length."""
     base = None

@@ -1,0 +1,205 @@
+"""Observability service smoke: a real ``serve_msa`` process under load.
+
+The CI step behind the ``BENCH_obs`` artifact (ISSUE 8): start the
+launcher as a subprocess, fire a mixed align / tree / search burst over
+HTTP, scrape ``GET /metrics``, and assert the exposition parses
+(``repro.obs.metrics.parse_exposition``) and carries every required
+metric family. SIGINT then exercises the graceful-drain path, and the
+``--metrics-out`` snapshot the server writes on exit lands in the
+artifact next to the scrape.
+
+  PYTHONPATH=src python -m benchmarks.bench_obs [--json PATH]
+
+Rows:
+  bench/obs/burst     wall time of the mixed burst (requests/sec)
+  bench/obs/scrape    /metrics size + family count
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import signal
+import socket
+import subprocess
+import sys
+import tempfile
+import time
+import urllib.error
+import urllib.request
+from pathlib import Path
+
+from .common import emit
+
+# families the exposition must carry after a mixed burst; a rename or a
+# lost instrumentation point fails CI here
+REQUIRED_FAMILIES = (
+    "repro_requests_started_total",
+    "repro_requests_finished_total",
+    "repro_requests_active",
+    "repro_request_seconds",
+    "repro_queue_wait_seconds",
+    "repro_batch_pairs",
+    "repro_cache_requests_total",
+    "repro_align_calls_total",
+    "repro_align_pairs_total",
+    "repro_tree_builds_total",
+    "repro_search_queries_total",
+    "repro_span_seconds",
+)
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def _post(url: str, obj: dict, timeout: float = 120.0) -> dict:
+    req = urllib.request.Request(
+        url, data=json.dumps(obj).encode(),
+        headers={"Content-Type": "application/json"})
+    with urllib.request.urlopen(req, timeout=timeout) as r:
+        return json.loads(r.read())
+
+
+def _get(url: str, timeout: float = 30.0) -> bytes:
+    with urllib.request.urlopen(url, timeout=timeout) as r:
+        return r.read()
+
+
+def _fasta(path: Path, names, seqs):
+    path.write_text("".join(f">{n}\n{s}\n" for n, s in zip(names, seqs)))
+
+
+def service_smoke(json_path: str | None = None) -> dict:
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+
+    def seq(L):
+        return "".join("ACGT"[c] for c in rng.integers(0, 4, L))
+
+    def mutate(s, k=3):
+        s = list(s)
+        for _ in range(k):
+            s[rng.integers(0, len(s))] = "ACGT"[rng.integers(0, 4)]
+        return "".join(s)
+
+    tmp = Path(tempfile.mkdtemp(prefix="bench_obs_"))
+    db_seqs = [seq(90) for _ in range(8)]
+    _fasta(tmp / "db.fasta", [f"db{i}" for i in range(8)], db_seqs)
+    metrics_out = tmp / "metrics.json"
+    trace_out = tmp / "trace.json"
+
+    port = _free_port()
+    base = f"http://127.0.0.1:{port}"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(Path(__file__).resolve().parents[1] / "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.serve_msa",
+         "--port", str(port), "--max-wait-ms", "2",
+         "--search-db", str(tmp / "db.fasta"),
+         "--metrics-out", str(metrics_out),
+         "--trace-out", str(trace_out)],
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT)
+    try:
+        deadline = time.time() + 180
+        while True:
+            try:
+                json.loads(_get(f"{base}/healthz", timeout=5))
+                break
+            except (urllib.error.URLError, OSError):
+                if proc.poll() is not None:
+                    out = proc.stdout.read().decode(errors="replace")
+                    raise RuntimeError(f"serve_msa died at startup:\n{out}")
+                if time.time() > deadline:
+                    raise RuntimeError("serve_msa did not become healthy")
+                time.sleep(0.5)
+
+        # mixed burst: aligns (with one repeat for a cache hit), a tree
+        # on the first result, and a search against the db
+        fam = [seq(80)]
+        fam += [mutate(fam[0]) for _ in range(3)]
+        t0 = time.perf_counter()
+        n_requests = 0
+        first = _post(f"{base}/align", {"sequences": fam})
+        n_requests += 1
+        assert first["trace_id"], "align response carries no trace_id"
+        for _ in range(3):
+            _post(f"{base}/align",
+                  {"sequences": [mutate(s) for s in fam]})
+            n_requests += 1
+        _post(f"{base}/align", {"sequences": fam})     # cache hit
+        n_requests += 1
+        tree = _post(f"{base}/tree",
+                     {"msa_id": first["alignment"]["msa_id"]})
+        n_requests += 1
+        assert tree["newick"].endswith(";")
+        srch = _post(f"{base}/search",
+                     {"sequences": [mutate(db_seqs[0]), mutate(db_seqs[3])]})
+        n_requests += 1
+        assert srch["queries"], "search returned no per-query results"
+        burst_s = time.perf_counter() - t0
+        emit("bench/obs/burst", burst_s * 1e6,
+             f"requests={n_requests};rps={n_requests / burst_s:.1f}")
+
+        # the scrape is the artifact's payload: it must parse and carry
+        # every required family
+        from repro.obs.metrics import parse_exposition
+        text = _get(f"{base}/metrics").decode()
+        families = parse_exposition(text)
+        missing = [f for f in REQUIRED_FAMILIES if f not in families]
+        if missing:
+            raise SystemExit(
+                "BENCH_obs gate failed; /metrics lacks families:\n  " +
+                "\n  ".join(missing))
+        statusz = _get(f"{base}/statusz").decode()
+        assert "active_requests" in statusz
+        emit("bench/obs/scrape", len(text),
+             f"families={len(families)};required_ok={len(REQUIRED_FAMILIES)}")
+
+        proc.send_signal(signal.SIGINT)
+        proc.wait(timeout=120)
+        snapshot = (json.loads(metrics_out.read_text())
+                    if metrics_out.exists() else None)
+        if snapshot is None:
+            raise SystemExit("server exited without writing --metrics-out")
+        started = sum(s["value"] for s in
+                      snapshot["repro_requests_started_total"]["samples"])
+        finished = sum(s["value"] for s in
+                       snapshot["repro_requests_finished_total"]["samples"])
+        rejected = sum(s["value"] for s in snapshot.get(
+            "repro_requests_rejected_total",
+            {"samples": []})["samples"])
+        if started != finished + rejected:
+            raise SystemExit(
+                f"request counters do not reconcile: started {started} != "
+                f"finished {finished} + rejected {rejected}")
+
+        from .common import ROWS
+        artifact = {"rows": ROWS, "metrics": snapshot,
+                    "scrape_families": sorted(families)}
+        if json_path:
+            with open(json_path, "w") as f:
+                json.dump(artifact, f, indent=1)
+            print(f"# wrote BENCH_obs artifact to {json_path}")
+        return artifact
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog="benchmarks.bench_obs")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the BENCH_obs artifact to PATH")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    service_smoke(json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,9 @@ into a handful of jitted calls. Rows:
                            merged bucketed batches
   bench/serve/incremental  add-to-MSA against the frozen center vs a
                            full realign of the grown family
+  bench/serve/obs_overhead coalesced run with repro.obs enabled vs
+                           ``obs.disabled()`` — the < 3% instrumentation
+                           guardrail, asserted in-harness
 
 Acceptance (ISSUE 4): coalesced throughput >= 3x sequential on >= 200
 mixed-length requests (run without ``--smoke``); the CI smoke uploads
@@ -113,6 +116,52 @@ def serve_matrix(smoke: bool = False, n_requests: int | None = None):
     return speedup
 
 
+def obs_overhead_row(smoke: bool = False, repeats: int = 3):
+    """Instrumentation guardrail (ISSUE 8): coalesced throughput with the
+    obs layer enabled must be < 3% off ``repro.obs.disabled()`` (plus a
+    small absolute floor against timer noise on the short smoke run)."""
+    import repro.obs as obs
+    from repro.core.msa import MSAConfig
+    from repro.serve.queue import AlignJob, CoalescingAligner
+
+    n = 32 if smoke else 128
+    rng = np.random.default_rng(3)
+    engine = MSAConfig(method="plain").engine()
+    reqs = _requests(n, rng, 16, 120 if smoke else 200)
+
+    def run_once():
+        co = CoalescingAligner(max_batch=n, max_wait_ms=1000.0)
+        t0 = time.perf_counter()
+        futs = [co.submit(AlignJob(Q=q[None, :],
+                                   qlens=np.array([L], np.int32),
+                                   target=t, tlen=L, engine=engine,
+                                   engine_key="bench"))
+                for q, t, L in reqs]
+        for f in futs:
+            f.result()
+        dt = time.perf_counter() - t0
+        co.close()
+        return dt
+
+    def median_s():
+        times = sorted(run_once() for _ in range(repeats))
+        return times[repeats // 2]
+
+    run_once()                           # warm: compile the merged buckets
+    with obs.disabled():
+        off_s = median_s()
+    on_s = median_s()
+    ratio = on_s / off_s
+    emit("bench/serve/obs_overhead", on_s * 1e6,
+         f"n={n};off_us={off_s * 1e6:.1f};ratio={ratio:.3f}")
+    if on_s > off_s * 1.03 + 0.025:
+        raise SystemExit(
+            f"obs overhead guardrail failed: coalesced enabled "
+            f"{on_s * 1e3:.1f}ms > disabled {off_s * 1e3:.1f}ms * 1.03 "
+            f"+ 25ms")
+    return ratio
+
+
 def incremental_row(smoke: bool = False):
     from repro.core.msa import MSAConfig, center_star_msa
     from repro.serve.incremental import add_to_msa
@@ -159,9 +208,12 @@ def main(argv=None):
     print("name,us_per_call,derived")
     serve_matrix(smoke=args.smoke, n_requests=args.requests)
     incremental_row(smoke=args.smoke)
+    obs_overhead_row(smoke=args.smoke)
     if args.json:
+        from repro.obs import REGISTRY
         with open(args.json, "w") as f:
-            json.dump(common.ROWS, f, indent=1)
+            json.dump({"rows": common.ROWS,
+                       "metrics": REGISTRY.snapshot()}, f, indent=1)
         print(f"# wrote {len(common.ROWS)} rows to {args.json}")
 
 

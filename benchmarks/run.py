@@ -13,74 +13,141 @@ Run the multi-pod dry-run separately: ``python -m repro.launch.dryrun --all``.
 
 ``--smoke`` runs the small backend matrices (the CI smoke step: the
 repro.align backend x method matrix plus the repro.phylo tree backend x N
-matrix); ``--json PATH`` additionally writes every emitted row as JSON,
-``--json-tree PATH`` writes just the tree rows, and ``--json-ml PATH``
-runs the ML-refinement matrix (``bench_ml``: logL gain + bootstrap
-throughput vs the NJ baseline on the Φ_DNA analogue) and writes its
-rows, and ``--json-search PATH`` runs the homology-search matrix
-(``bench_search``: queries/sec vs DB size, prefilter survival, top-k
-recall vs the exhaustive oracle) and writes its rows, and
-``--json-kernels PATH`` runs the kernel roofline matrix
-(``bench_kernels``: analytic flops/HBM-bytes at the default bucket
-shapes plus measured achieved-vs-peak rows) and GATES it against the
-recorded baseline (``benchmarks/baselines/BENCH_kernels.json`` — >20%
-regression on a gated metric fails the run) — CI uploads
-``BENCH_msa.json``, ``BENCH_tree.json``, ``BENCH_ml.json``,
-``BENCH_search.json``, and ``BENCH_kernels.json`` as artifacts so every
-bench trajectory is tracked per commit (``docs/BENCHMARKS.md`` documents
-the artifact schema).
+matrix). ``--json <name>[,<name>...]`` selects which benchmark artifacts
+to write — names from {``msa``, ``tree``, ``ml``, ``search``,
+``kernels``, ``all``} — each landing as ``BENCH_<name>.json`` in
+``--out-dir`` (default ``.``). Every artifact is
+``{"rows": [...], "metrics": {...}}``: the emitted rows plus the
+``repro.obs`` metrics snapshot taken after that suite ran, so bench
+trajectories carry the engine's own counters (dispatches, fallbacks,
+pad waste) per commit. ``kernels`` additionally GATES the model rows
+against the recorded baseline
+(``benchmarks/baselines/BENCH_kernels.json`` — >20% regression on a
+gated metric fails the run).
+
+A PATH-looking ``--json`` value (contains ``/`` or ends in ``.json``)
+keeps the legacy behavior — every emitted row dumped to that path — and
+the legacy per-suite flags (``--json-tree``, ``--json-ml``,
+``--json-search``, ``--json-kernels``) remain as deprecated aliases
+that select the suite and override its output path.
+
+The ``msa`` suite also runs the obs-overhead guardrail
+(``bench_msa.obs_overhead_row``): instrumentation must cost < 3% on the
+backend-matrix path, asserted in-harness (``docs/BENCHMARKS.md``
+documents the artifact schema; CI uploads the ``BENCH_*.json`` set).
 """
 from __future__ import annotations
 
 import argparse
 import json
+from pathlib import Path
+
+_SUITES = ("msa", "tree", "ml", "search", "kernels")
+
+
+def _artifact(rows) -> dict:
+    """The BENCH_*.json schema: rows + the obs metrics snapshot."""
+    from repro.obs import REGISTRY
+    return {"rows": rows, "metrics": REGISTRY.snapshot()}
+
+
+def _write(path: Path, rows, label: str):
+    with open(path, "w") as f:
+        json.dump(_artifact(rows), f, indent=1)
+    print(f"# wrote {len(rows)} {label} rows to {path}")
+
+
+def parse_json_selector(value):
+    """``--json`` value -> (names, legacy_path).
+
+    Suite names (comma-separated) select artifacts; anything that looks
+    like a path (has a separator or a .json suffix) is the legacy
+    dump-all-rows form.
+    """
+    if value is None:
+        return [], None
+    looks_like_path = ("/" in value or value.endswith(".json")
+                       or value.endswith(".JSON"))
+    names = [n.strip() for n in value.split(",") if n.strip()]
+    if not looks_like_path and all(n in _SUITES or n == "all"
+                                   for n in names):
+        if "all" in names:
+            return list(_SUITES), None
+        return names, None
+    return [], value
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small subset: the backend matrices only")
-    ap.add_argument("--json", default=None, metavar="PATH",
-                    help="also write emitted rows as JSON to PATH")
+    ap.add_argument("--json", default=None, metavar="NAMES|PATH",
+                    help="comma-separated suites to write as "
+                         "BENCH_<name>.json artifacts (msa, tree, ml, "
+                         "search, kernels, all); a PATH-looking value "
+                         "keeps the legacy dump-every-row behavior")
+    ap.add_argument("--out-dir", default=".", metavar="DIR",
+                    help="directory for BENCH_<name>.json artifacts")
     ap.add_argument("--json-tree", default=None, metavar="PATH",
-                    help="also write the tree-stage rows as JSON to PATH")
+                    help="deprecated alias: --json tree, written to PATH")
     ap.add_argument("--json-ml", default=None, metavar="PATH",
-                    help="also run the ML-refinement matrix and write its "
-                         "rows as JSON to PATH")
+                    help="deprecated alias: --json ml, written to PATH")
     ap.add_argument("--json-search", default=None, metavar="PATH",
-                    help="also run the homology-search matrix and write "
-                         "its rows as JSON to PATH")
+                    help="deprecated alias: --json search, written to PATH")
     ap.add_argument("--json-kernels", default=None, metavar="PATH",
-                    help="also run the kernel roofline matrix, write its "
-                         "rows as JSON to PATH, and gate against the "
-                         "recorded baseline")
+                    help="deprecated alias: --json kernels, written to PATH")
     args = ap.parse_args()
+
+    names, legacy_all = parse_json_selector(args.json)
+    overrides = {}
+    for name, flag in (("tree", args.json_tree), ("ml", args.json_ml),
+                       ("search", args.json_search),
+                       ("kernels", args.json_kernels)):
+        if flag:
+            print(f"# --json-{name} is deprecated; use --json {name} "
+                  f"[--out-dir DIR]")
+            if name not in names:
+                names.append(name)
+            overrides[name] = Path(flag)
+    out_dir = Path(args.out_dir)
+    if names:
+        out_dir.mkdir(parents=True, exist_ok=True)
+
+    def art_path(name: str) -> Path:
+        return overrides.get(name, out_dir / f"BENCH_{name}.json")
 
     from . import common
     print("name,us_per_call,derived")
     if args.smoke:
         from . import bench_msa, bench_tree
         bench_msa.backend_matrix(smoke=True)
-        n_msa = len(common.ROWS)
+        msa_rows = list(common.ROWS)
         bench_tree.backend_matrix(smoke=True)
-        tree_rows = common.ROWS[n_msa:]
+        tree_rows = common.ROWS[len(msa_rows):]
     else:
         from . import bench_msa, bench_scaling, bench_tree
         bench_msa.main()
-        n_msa = len(common.ROWS)
+        msa_rows = list(common.ROWS)
         bench_tree.main()
-        tree_rows = common.ROWS[n_msa:]
+        tree_rows = common.ROWS[len(msa_rows):]
         bench_scaling.main()
 
+    if "msa" in names:
+        # the obs-overhead guardrail rides with the msa artifact: the
+        # instrumented backend-matrix path must cost < 3% over disabled
+        n_before = len(common.ROWS)
+        bench_msa.obs_overhead_row(smoke=args.smoke)
+        msa_rows = msa_rows + common.ROWS[n_before:]
+
     ml_rows = []
-    if args.json_ml:
+    if "ml" in names:
         from . import bench_ml
         n_before = len(common.ROWS)
         bench_ml.ml_matrix(smoke=args.smoke)
         ml_rows = common.ROWS[n_before:]
 
     search_rows = []
-    if args.json_search:
+    if "search" in names:
         from . import bench_search
         n_before = len(common.ROWS)
         bench_search.search_matrix(smoke=args.smoke)
@@ -88,34 +155,28 @@ def main() -> None:
 
     kernel_failures = []
     kernel_rows = []
-    if args.json_kernels:
+    if "kernels" in names:
         from . import bench_kernels
         kernel_rows = bench_kernels.kernel_matrix(smoke=args.smoke)
         kernel_failures = bench_kernels.check_invariants(kernel_rows)
         kernel_failures += bench_kernels.check_against_baseline(kernel_rows)
 
-    if args.json:
-        with open(args.json, "w") as f:
+    if legacy_all:
+        print("# PATH-valued --json is deprecated; use --json "
+              "<suite>[,<suite>] with --out-dir")
+        with open(legacy_all, "w") as f:
             json.dump(common.ROWS, f, indent=1)
-        print(f"# wrote {len(common.ROWS)} rows to {args.json}")
-    if args.json_tree:
-        with open(args.json_tree, "w") as f:
-            json.dump(tree_rows, f, indent=1)
-        print(f"# wrote {len(tree_rows)} tree rows to {args.json_tree}")
-    if args.json_ml:
-        with open(args.json_ml, "w") as f:
-            json.dump(ml_rows, f, indent=1)
-        print(f"# wrote {len(ml_rows)} ml rows to {args.json_ml}")
-    if args.json_search:
-        with open(args.json_search, "w") as f:
-            json.dump(search_rows, f, indent=1)
-        print(f"# wrote {len(search_rows)} search rows to "
-              f"{args.json_search}")
-    if args.json_kernels:
-        with open(args.json_kernels, "w") as f:
-            json.dump(kernel_rows, f, indent=1)
-        print(f"# wrote {len(kernel_rows)} kernel rows to "
-              f"{args.json_kernels}")
+        print(f"# wrote {len(common.ROWS)} rows to {legacy_all}")
+    if "msa" in names:
+        _write(art_path("msa"), msa_rows, "msa")
+    if "tree" in names:
+        _write(art_path("tree"), tree_rows, "tree")
+    if "ml" in names:
+        _write(art_path("ml"), ml_rows, "ml")
+    if "search" in names:
+        _write(art_path("search"), search_rows, "search")
+    if "kernels" in names:
+        _write(art_path("kernels"), kernel_rows, "kernel")
         if kernel_failures:
             raise SystemExit("BENCH_kernels gate failed:\n  " +
                              "\n  ".join(kernel_failures))

@@ -39,6 +39,35 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import backends, bucketing
+from ..obs import metrics as _obs
+
+_M_CALLS = _obs.counter(
+    "repro_align_calls_total",
+    "backend invocations (buckets + fallback batches)", ("api", "backend"))
+_M_PAIRS = _obs.counter(
+    "repro_align_pairs_total", "pairs aligned", ("api", "backend"))
+_M_FALLBACK = _obs.counter(
+    "repro_align_fallback_pairs_total",
+    "pairs re-aligned with full DP after band overflow", ("backend",))
+_M_CELLS = _obs.counter(
+    "repro_align_cells_total", "useful DP cells dispatched", ("api",))
+_M_PAD_CELLS = _obs.counter(
+    "repro_align_pad_cells_total", "padding DP cells dispatched", ("api",))
+_G_PAD_WASTE = _obs.gauge(
+    "repro_align_pad_waste_ratio",
+    "padding fraction of the last dispatch's DP area", ("api",))
+
+
+def _record_dispatch(api: str, backend: str, n_calls: int, n_pairs: int,
+                     real_cells: Optional[int],
+                     padded_cells: Optional[int]) -> None:
+    _M_CALLS.labels(api=api, backend=backend).inc(n_calls)
+    _M_PAIRS.labels(api=api, backend=backend).inc(n_pairs)
+    if real_cells is None or padded_cells is None or padded_cells <= 0:
+        return
+    _M_CELLS.labels(api=api).inc(real_cells)
+    _M_PAD_CELLS.labels(api=api).inc(max(padded_cells - real_cells, 0))
+    _G_PAD_WASTE.labels(api=api).set(1.0 - real_cells / padded_cells)
 
 
 class EngineResult(NamedTuple):
@@ -167,11 +196,18 @@ class AlignEngine:
         fn = self.batch_fn()
 
         if not self.bucket or B == 0:
+            _record_dispatch("to_center", self.backend, 1 if B else 0, B,
+                             None, None)
             out = fn(Q, lens, b, lb)
             return self._apply_fallback(out, Q, lens, b, lb, P)
 
-        plan = bucketing.bucket_plan(np.asarray(lens), Lmax,
+        lens_np = np.asarray(lens)
+        real_cells = int(lens_np.sum()) * m
+        plan = bucketing.bucket_plan(lens_np, Lmax,
                                      min_bucket=self.min_bucket)
+        padded_cells = sum(width * len(idx) for width, idx in plan) * m
+        _record_dispatch("to_center", self.backend, len(plan), B,
+                         real_cells, padded_cells)
         if len(plan) == 1:
             width, _ = plan[0]
             out = fn(Q[:, :width], lens, b, lb)
@@ -203,6 +239,8 @@ class AlignEngine:
         b_rows = _pad_cols(out.b_row, P, self.gap_code)
         aln_len = out.aln_len
         if len(bad):
+            _M_FALLBACK.labels(backend=self.backend).inc(len(bad))
+            _M_CALLS.labels(api="to_center", backend=self.backend).inc()
             ix = jnp.asarray(bad)
             res = self._full_dp_fn()(Q[ix], lens[ix], b, lb)
             score = score.at[ix].set(res.score)
@@ -292,17 +330,26 @@ class AlignEngine:
         fn = self.pairs_fn()
 
         if not self.bucket:
+            _record_dispatch("pairs", self.backend, 1, B, None, None)
             out = fn(Q, qlens, T, tlens)
             return self._apply_pairs_fallback(out, Q, qlens, T, tlens, P,
                                               n_calls=1)
+
+        qlens_np = np.asarray(qlens)
+        tlens_np = np.asarray(tlens)
+        real_cells = int((qlens_np.astype(np.int64)
+                          * tlens_np.astype(np.int64)).sum())
 
         if self.band_policy == "adaptive" and self._is_banded:
             # Band-aware buckets: pairs sharing (wq, wt, W) share one
             # jitted kernel instance; skewed pairs get a band wide enough
             # to not overflow instead of a guaranteed full-DP fallback.
             plan = bucketing.band_bucket_plan(
-                np.asarray(qlens), np.asarray(tlens), Lq, Lt,
+                qlens_np, tlens_np, Lq, Lt,
                 band=self.band, min_bucket=self.min_bucket)
+            _record_dispatch(
+                "pairs", self.backend, len(plan), B, real_cells,
+                sum(wq * wt * len(idx) for wq, wt, _, idx in plan))
             score = jnp.zeros((B,), jnp.float32)
             a_rows = jnp.full((B, P), self.gap_code, jnp.int8)
             b_rows = jnp.full((B, P), self.gap_code, jnp.int8)
@@ -324,9 +371,10 @@ class AlignEngine:
             return self._apply_pairs_fallback(merged, Q, qlens, T, tlens, P,
                                               n_calls=len(plan))
 
-        plan = bucketing.pair_bucket_plan(np.asarray(qlens),
-                                          np.asarray(tlens), Lq, Lt,
+        plan = bucketing.pair_bucket_plan(qlens_np, tlens_np, Lq, Lt,
                                           min_bucket=self.min_bucket)
+        _record_dispatch("pairs", self.backend, len(plan), B, real_cells,
+                         sum(wq * wt * len(idx) for wq, wt, idx in plan))
         if len(plan) == 1:
             wq, wt, _ = plan[0]
             out = fn(Q[:, :wq], qlens, T[:, :wt], tlens)
@@ -361,6 +409,8 @@ class AlignEngine:
         b_rows = _pad_cols(out.b_row, P, self.gap_code)
         aln_len = out.aln_len
         if len(bad):
+            _M_FALLBACK.labels(backend=self.backend).inc(len(bad))
+            _M_CALLS.labels(api="pairs", backend=self.backend).inc()
             ix = jnp.asarray(bad)
             res = self._full_dp_pairs_fn()(Q[ix], qlens[ix], T[ix], tlens[ix])
             score = score.at[ix].set(res.score)

@@ -31,6 +31,7 @@ import numpy as np
 
 from . import alphabet as ab
 from . import centerstar, kmer_index, pairwise
+from ..obs import trace as _trace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -226,7 +227,8 @@ def center_star_msa(seqs: Sequence[str] | np.ndarray,
     alpha = cfg.alpha()
     gap = alpha.gap_code
     if isinstance(seqs, (list, tuple)):
-        S, lens = encode_for_msa(seqs, cfg)
+        with _trace.span("encode", n=len(seqs)):
+            S, lens = encode_for_msa(seqs, cfg)
     else:
         S = jnp.asarray(seqs)
         lens = jnp.asarray(lens)
@@ -235,17 +237,24 @@ def center_star_msa(seqs: Sequence[str] | np.ndarray,
         # center selection never runs; the effective mode is trivially first
         return MSAResult(np.asarray(S), 0, 0, Lmax, "first")
 
-    cidx, center_mode = _select_center(S, lens, cfg)
-    center = S[cidx]
-    lc = lens[cidx]
-    others = np.array([i for i in range(N) if i != cidx])
-    Q, qlens = S[jnp.asarray(others)], lens[jnp.asarray(others)]
+    with _trace.span("center", n=int(N), mode=cfg.center):
+        cidx, center_mode = _select_center(S, lens, cfg)
+        center = S[cidx]
+        lc = lens[cidx]
+        others = np.array([i for i in range(N) if i != cidx])
+        Q, qlens = S[jnp.asarray(others)], lens[jnp.asarray(others)]
 
-    a_rows, b_rows, n_fallback = map1_align_to_center(Q, qlens, center, lc,
-                                                      cfg)
-    msa, width = assemble_center_star(a_rows, b_rows, center, lc,
-                                      others=others, cidx=int(cidx),
-                                      n_total=N, gap=gap)
+    with _trace.span("map1", n=int(N) - 1, method=cfg.method,
+                     backend=cfg.backend) as sp:
+        a_rows, b_rows, n_fallback = map1_align_to_center(
+            Q, qlens, center, lc, cfg)
+        if sp is not None:
+            # async dispatch would otherwise bill the DP to "assemble"
+            jax.block_until_ready((a_rows, b_rows))
+    with _trace.span("assemble", n=int(N)):
+        msa, width = assemble_center_star(a_rows, b_rows, center, lc,
+                                          others=others, cidx=int(cidx),
+                                          n_total=N, gap=gap)
     return MSAResult(msa, int(cidx), n_fallback, width, center_mode)
 
 

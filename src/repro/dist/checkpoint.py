@@ -21,8 +21,19 @@ from typing import List, Optional
 import jax
 import numpy as np
 
+from ..obs import metrics as _obs
+
 _PREFIX = "step_"
 _SUFFIX = ".npz"
+
+_H_WRITE = _obs.histogram("repro_checkpoint_write_seconds",
+                          "serialize + atomic replace per checkpoint")
+_C_WRITES = _obs.counter("repro_checkpoint_writes_total",
+                         "checkpoints written")
+_C_BYTES = _obs.counter("repro_checkpoint_bytes_total",
+                        "checkpoint bytes written")
+_C_RESTORES = _obs.counter("repro_checkpoint_restores_total",
+                           "successful checkpoint restores")
 
 
 def atomic_save_npz(path, arrays: dict):
@@ -82,11 +93,17 @@ class CheckpointManager:
             self._write(step, host)
 
     def _write(self, step: int, host_leaves):
+        import time
+        t0 = time.perf_counter()
         final = self._path(step)
         tmp = self.dir / f".tmp-{uuid.uuid4().hex}"
         with open(tmp, "wb") as f:
             np.savez(f, **{f"leaf_{i}": a for i, a in enumerate(host_leaves)})
+        nbytes = tmp.stat().st_size
         os.replace(tmp, final)
+        _H_WRITE.observe(time.perf_counter() - t0)
+        _C_WRITES.inc()
+        _C_BYTES.inc(nbytes)
         self._gc()
 
     def _gc(self):
@@ -129,6 +146,7 @@ class CheckpointManager:
                 out = [jax.device_put(h, d) for h, d in zip(host, sh_leaves)]
             else:
                 out = [jax.numpy.asarray(h) for h in host]
+            _C_RESTORES.inc()
             return jax.tree.unflatten(treedef, out), s
         raise FileNotFoundError(
             f"no restorable checkpoint in {self.dir} "

@@ -19,7 +19,15 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, List, Optional
 
+from ..obs import metrics as _obs
 from .checkpoint import CheckpointManager
+
+_C_STEPS = _obs.counter("repro_resilient_steps_total",
+                        "steps completed by ResilientLoop")
+_C_FAILURES = _obs.counter("repro_resilient_failures_total",
+                           "StepFailures caught by ResilientLoop")
+_C_REPLAYS = _obs.counter("repro_resilient_replays_total",
+                          "restore-and-replay recoveries")
 
 
 class StepFailure(RuntimeError):
@@ -106,8 +114,10 @@ class ResilientLoop:
                     self.failure_hook(step)
                 state = self.step_fn(state, batches(step))
                 step += 1
+                _C_STEPS.inc()
             except StepFailure:
                 failures += 1
+                _C_FAILURES.inc()
                 if self.max_failures is not None and failures > self.max_failures:
                     raise
                 self.ckpt.wait()        # an async save may be in flight
@@ -115,6 +125,7 @@ class ResilientLoop:
                     raise
                 state, step = self.ckpt.restore(
                     state, shardings=self.state_shardings)
+                _C_REPLAYS.inc()
         if self.ckpt_every and self.ckpt.latest_step() != step:
             self.ckpt.save(step, state)      # final state must be durable
         self.ckpt.wait()

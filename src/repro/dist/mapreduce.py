@@ -42,7 +42,12 @@ from ..align import AlignEngine
 from ..align.engine import _pad_cols
 from ..core import centerstar
 from ..core import msa as msa_mod
+from ..obs import metrics as _obs
+from ..obs import trace as _trace
 from . import sharding as sh
+
+_C_MAP_CALLS = _obs.counter("repro_dist_map_calls_total",
+                            "host-side mesh pipeline invocations", ("stage",))
 
 
 def pad_rows(x, multiple_of: int, fill=0):
@@ -297,7 +302,8 @@ def msa_over_mesh(seqs, cfg, mesh: Mesh, *, data_axis: str = "data",
     N, Lmax = S.shape
     if N < 2:
         return msa_mod.MSAResult(np.asarray(S), 0, 0, Lmax, "first")
-    cidx, center_mode = msa_mod._select_center(S, lens, cfg)
+    with _trace.span("center", n=int(N), mode=cfg.center, dist=True):
+        cidx, center_mode = msa_mod._select_center(S, lens, cfg)
     center, lc = S[cidx], lens[cidx]
     others = np.array([i for i in range(N) if i != cidx])
     n_shards = sh.axis_size(mesh, data_axis)
@@ -307,29 +313,37 @@ def msa_over_mesh(seqs, cfg, mesh: Mesh, *, data_axis: str = "data",
 
     out_len = 2 * Lmax + out_pad
     num_slots = int(center.shape[0]) + 1
-    fn = distributed_center_star(
-        mesh, method=cfg.method, sub=cfg.matrix(), gap_code=gap,
-        out_len=out_len, num_slots=num_slots, gap_open=cfg.gap_open,
-        gap_extend=cfg.gap_extend, k=cfg.k, stride=cfg.stride,
-        max_anchors=cfg.max_anchors, max_seg=cfg.max_seg,
-        map_chunks=map_chunks, data_axis=data_axis, local=cfg.local,
-        backend=cfg.backend, band=cfg.band)
-    operands = [sh.shard_rows(Q, mesh, data_axis),
-                sh.shard_rows(qlens, mesh, data_axis),
-                sh.broadcast(center, mesh), jnp.int32(lc)]
-    if cfg.method == "kmer":
-        operands.append(sh.broadcast(
-            kmer_index.build_center_index(center, lc, k=cfg.k), mesh))
-    rows, G = fn(*operands)
+    _C_MAP_CALLS.labels(stage="msa").inc()
+    with _trace.span("map1", n=int(N) - 1, method=cfg.method,
+                     backend=cfg.backend, dist=True, n_shards=n_shards,
+                     shard_rows=Q.shape[0] // n_shards,
+                     map_chunks=map_chunks) as sp:
+        fn = distributed_center_star(
+            mesh, method=cfg.method, sub=cfg.matrix(), gap_code=gap,
+            out_len=out_len, num_slots=num_slots, gap_open=cfg.gap_open,
+            gap_extend=cfg.gap_extend, k=cfg.k, stride=cfg.stride,
+            max_anchors=cfg.max_anchors, max_seg=cfg.max_seg,
+            map_chunks=map_chunks, data_axis=data_axis, local=cfg.local,
+            backend=cfg.backend, band=cfg.band)
+        operands = [sh.shard_rows(Q, mesh, data_axis),
+                    sh.shard_rows(qlens, mesh, data_axis),
+                    sh.broadcast(center, mesh), jnp.int32(lc)]
+        if cfg.method == "kmer":
+            operands.append(sh.broadcast(
+                kmer_index.build_center_index(center, lc, k=cfg.k), mesh))
+        rows, G = fn(*operands)
+        if sp is not None:
+            jax.block_until_ready((rows, G))
 
-    width = centerstar.msa_width(G, int(lc))
-    if width > out_len:
-        raise ValueError(
-            f"merged width {width} exceeds out_len {out_len}; rerun with a "
-            f"larger out_pad (sequences too diverged for 2*Lmax)")
-    crow = center_row(center, lc, G, gap_code=gap, out_len=out_len)
-    msa = np.full((N, out_len), gap, np.int8)
-    msa[others] = unpad_rows(np.asarray(rows), n_q)
-    msa[cidx] = np.asarray(crow)
+    with _trace.span("assemble", n=int(N), dist=True):
+        width = centerstar.msa_width(G, int(lc))
+        if width > out_len:
+            raise ValueError(
+                f"merged width {width} exceeds out_len {out_len}; rerun "
+                f"with a larger out_pad (sequences too diverged for 2*Lmax)")
+        crow = center_row(center, lc, G, gap_code=gap, out_len=out_len)
+        msa = np.full((N, out_len), gap, np.int8)
+        msa[others] = unpad_rows(np.asarray(rows), n_q)
+        msa[cidx] = np.asarray(crow)
     return msa_mod.MSAResult(msa[:, :width], int(cidx), -1, width,
                              center_mode)

@@ -37,6 +37,8 @@ Flags:
   --k                   k-mer width for the kmer method / sampled center
   --backend / --band    map(1) DP backend registry + band width
   --dist / --mesh       run the shard_map pipeline over a DxM mesh
+  --trace-out           write the run's span tree as Chrome-trace JSON
+  --metrics-out         write the final metrics snapshot as JSON
 
 ``docs/CLI.md`` holds the generated ``--help`` reference for every
 launcher (kept in sync by ``tests/test_docs.py``).
@@ -85,6 +87,8 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--mesh", default=None,
                     help="data x model for --dist, e.g. 4x1; default: all "
                          "visible devices x 1")
+    from ..obs import export as obs_export
+    obs_export.add_output_args(ap)
     return ap
 
 
@@ -94,13 +98,22 @@ def main(argv=None):
     if args.tree == "ml" and args.alphabet == "protein":
         parser.error("--tree ml needs a nucleotide alphabet (the 4-state "
                      "likelihood); use --tree cluster/tiled for protein")
+    from ..obs import export as obs_export
+    from ..obs import trace as _trace
+    with _trace.request_trace(), _trace.span("msa_run", fasta=args.fasta):
+        _run(args)
+    obs_export.write_outputs(args)
 
-    from ..core import alphabet as ab
-    from ..core import likelihood, sp_score
-    from ..core.msa import MSAConfig, center_star_msa, decode_msa
-    from ..data import read_fasta, write_fasta
 
-    names, seqs = read_fasta(args.fasta)
+def _run(args):
+    from ..obs import trace as _trace
+    with _trace.span("load"):
+        from ..core import alphabet as ab
+        from ..core import likelihood, sp_score
+        from ..core.msa import MSAConfig, center_star_msa, decode_msa
+        from ..data import read_fasta, write_fasta
+        names, seqs = read_fasta(args.fasta)
+
     alpha = {"dna": ab.DNA, "rna": ab.RNA, "protein": ab.PROTEIN}[args.alphabet]
     cfg = MSAConfig(method=args.method, alphabet=args.alphabet, k=args.k,
                     gap_open=11 if args.alphabet == "protein" else 3,
@@ -117,12 +130,14 @@ def main(argv=None):
         res = center_star_msa(seqs, cfg)
     t_msa = time.time() - t0
     out = Path(args.out)
-    out.mkdir(parents=True, exist_ok=True)
-    write_fasta(out / "aligned.fasta", names, decode_msa(res.msa, cfg))
+    with _trace.span("write", out=str(out)):
+        out.mkdir(parents=True, exist_ok=True)
+        write_fasta(out / "aligned.fasta", names, decode_msa(res.msa, cfg))
 
-    msa = jnp.asarray(res.msa)
-    sp = float(sp_score.avg_sp(msa, gap_code=alpha.gap_code,
-                               n_chars=alpha.n_chars))
+    with _trace.span("score"):
+        msa = jnp.asarray(res.msa)
+        sp = float(sp_score.avg_sp(msa, gap_code=alpha.gap_code,
+                                   n_chars=alpha.n_chars))
     from ..align import resolve_backend
     report = {"n_sequences": len(seqs), "width": res.width,
               "center": names[res.center_idx],
@@ -152,14 +167,16 @@ def main(argv=None):
         if tree_res.tile_stats is not None:
             report["tile_stats"] = tree_res.tile_stats
         nwk = tree_res.newick(names)
-        (out / "tree.nwk").write_text(nwk + "\n")
+        with _trace.span("write", artifact="tree.nwk"):
+            (out / "tree.nwk").write_text(nwk + "\n")
         if args.tree_ll and args.alphabet != "protein":
             report["log_likelihood"] = float(likelihood.log_likelihood(
                 msa, jnp.asarray(tree_res.children),
                 jnp.asarray(tree_res.blen), tree_res.root,
                 gap_code=alpha.gap_code))
 
-    (out / "report.json").write_text(json.dumps(report, indent=1))
+    with _trace.span("report"):
+        (out / "report.json").write_text(json.dumps(report, indent=1))
     print(json.dumps(report, indent=1))
 
 

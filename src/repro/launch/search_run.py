@@ -37,6 +37,8 @@ Flags:
                         (0 = unrefined NJ tree)
   --ml-steps            adam steps per ML fit (pipeline trees)
   --seed                bootstrap / ML seed
+  --trace-out           write the run's span tree as Chrome-trace JSON
+  --metrics-out         write the final metrics snapshot as JSON
 """
 from __future__ import annotations
 
@@ -99,6 +101,8 @@ def build_parser() -> argparse.ArgumentParser:
                     help="adam steps per ML fit for --bootstrap trees")
     ap.add_argument("--seed", type=int, default=0,
                     help="bootstrap / ML seed")
+    from ..obs import export as obs_export
+    obs_export.add_output_args(ap)
     return ap
 
 
@@ -110,7 +114,15 @@ def _safe_name(name: str) -> str:
 def main(argv=None):
     parser = build_parser()
     args = parser.parse_args(argv)
+    from ..obs import export as obs_export
+    from ..obs import trace as _trace
+    with _trace.request_trace(), _trace.span("search_run", query=args.query):
+        _run(args, parser)
+    obs_export.write_outputs(args)
 
+
+def _run(args, parser):
+    from ..obs import trace as _trace
     from ..data import read_fasta, write_fasta
     from ..search import SearchConfig, SearchEngine, SearchIndex
 
@@ -129,30 +141,32 @@ def main(argv=None):
     engine = SearchEngine(cfg, mesh=mesh)
 
     t0 = time.time()
-    index_path = Path(args.index) if args.index else None
-    if index_path is not None and index_path.exists():
-        index = SearchIndex.load(index_path)
-        if index.k != args.seed_k or index.alphabet != args.alphabet:
-            parser.error(
-                f"index {index_path} was built with k={index.k} "
-                f"alphabet={index.alphabet}; rebuild it (delete the file) "
-                f"or pass matching --seed-k/--alphabet")
-        index_built = False
-    else:
-        if args.db is None:
-            parser.error("--db is required when --index is absent or "
-                         "does not exist yet")
-        db_names, db_seqs = read_fasta(args.db)
-        index = engine.build_index(db_names, db_seqs)
-        if index_path is not None:
-            index.save(index_path)
-        index_built = True
+    with _trace.span("index"):
+        index_path = Path(args.index) if args.index else None
+        if index_path is not None and index_path.exists():
+            index = SearchIndex.load(index_path)
+            if index.k != args.seed_k or index.alphabet != args.alphabet:
+                parser.error(
+                    f"index {index_path} was built with k={index.k} "
+                    f"alphabet={index.alphabet}; rebuild it (delete the "
+                    f"file) or pass matching --seed-k/--alphabet")
+            index_built = False
+        else:
+            if args.db is None:
+                parser.error("--db is required when --index is absent or "
+                             "does not exist yet")
+            db_names, db_seqs = read_fasta(args.db)
+            index = engine.build_index(db_names, db_seqs)
+            if index_path is not None:
+                index.save(index_path)
+            index_built = True
     t_index = time.time() - t0
 
     q_names, q_seqs = read_fasta(args.query)
     t0 = time.time()
-    result = engine.search(q_names, q_seqs, index,
-                           exhaustive=args.exhaustive)
+    with _trace.span("search", n_queries=len(q_seqs)):
+        result = engine.search(q_names, q_seqs, index,
+                               exhaustive=args.exhaustive)
     t_search = time.time() - t0
 
     out = Path(args.out)
@@ -169,9 +183,10 @@ def main(argv=None):
                                if t_search > 0 else None)}
 
     if args.pipeline:
-        report["families"] = _run_pipeline(args, out, index, result,
-                                           q_names, q_seqs, mesh,
-                                           write_fasta)
+        with _trace.span("pipeline", n_queries=len(q_seqs)):
+            report["families"] = _run_pipeline(args, out, index, result,
+                                               q_names, q_seqs, mesh,
+                                               write_fasta)
 
     (out / "report.json").write_text(json.dumps(report, indent=1))
     print(json.dumps(report, indent=1))

@@ -13,6 +13,8 @@ Serves ``repro.serve.MSAService`` over stdlib HTTP/JSON:
   POST /search     query sequences -> per-query top-k database hits
                    (needs --search-db / --search-index)
   GET  /healthz    liveness + cache / coalescing-queue stats
+  GET  /metrics    Prometheus text exposition of the repro.obs registry
+  GET  /statusz    human-readable status page (config, queues, spans)
 
 Flags:
   --host/--port         bind address (default 127.0.0.1:8642)
@@ -42,6 +44,8 @@ Flags:
                         over the mesh (repro.dist.mapreduce) and shard-map
                         /tree distance strips over it
   --verbose             log one line per HTTP request
+  --trace-out           on exit, write the span tree as Chrome-trace JSON
+  --metrics-out         on exit, write the final metrics snapshot as JSON
 
 SIGINT/SIGTERM drain gracefully: the listener stops, in-flight requests
 finish, and the coalescing queue flushes before exit.
@@ -117,6 +121,8 @@ def build_parser() -> argparse.ArgumentParser:
                          "goes over the mesh")
     ap.add_argument("--verbose", action="store_true",
                     help="log one line per HTTP request")
+    from ..obs import export as obs_export
+    obs_export.add_output_args(ap)
     return ap
 
 
@@ -192,6 +198,8 @@ def main(argv=None):
     print("draining: finishing in-flight requests ...")
     httpd.server_close()          # waits for handler threads
     service.drain()               # flush the coalescing queue
+    from ..obs import export as obs_export
+    obs_export.write_outputs(args)
     print("drained; bye")
 
 

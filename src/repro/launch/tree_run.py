@@ -35,6 +35,8 @@ Flags:
   --nni-rounds          max accepted NNI rounds
   --dist / --mesh       shard-map distance strips (and bootstrap
                         replicates) over a DxM mesh
+  --trace-out           write the run's span tree as Chrome-trace JSON
+  --metrics-out         write the final metrics snapshot as JSON
 """
 from __future__ import annotations
 
@@ -92,6 +94,8 @@ def build_parser() -> argparse.ArgumentParser:
                          "replicates, and letting backend=auto pick "
                          "tiled); with --dist alone: all visible "
                          "devices x 1")
+    from ..obs import export as obs_export
+    obs_export.add_output_args(ap)
     return ap
 
 
@@ -103,13 +107,21 @@ def main(argv=None):
     if args.refine == "ml" and args.alphabet == "protein":
         parser.error("--refine ml needs a nucleotide alphabet (the "
                      "4-state likelihood)")
+    from ..obs import export as obs_export
+    from ..obs import trace as _trace
+    with _trace.request_trace(), _trace.span("tree_run", fasta=args.fasta):
+        _run(args)
+    obs_export.write_outputs(args)
 
-    from ..core import alphabet as ab
-    from ..core import likelihood
-    from ..data import read_fasta
-    from ..phylo import TreeEngine
 
-    names, seqs = read_fasta(args.fasta)
+def _run(args):
+    from ..obs import trace as _trace
+    with _trace.span("load"):
+        from ..core import alphabet as ab
+        from ..core import likelihood
+        from ..data import read_fasta
+        from ..phylo import TreeEngine
+        names, seqs = read_fasta(args.fasta)
     widths = {len(s) for s in seqs}
     if len(widths) != 1:
         raise ValueError(
@@ -136,8 +148,9 @@ def main(argv=None):
     result = engine.build(msa)
 
     out = Path(args.out)
-    out.mkdir(parents=True, exist_ok=True)
-    (out / "tree.nwk").write_text(result.newick(names) + "\n")
+    with _trace.span("write", out=str(out)):
+        out.mkdir(parents=True, exist_ok=True)
+        (out / "tree.nwk").write_text(result.newick(names) + "\n")
     report = {"n_sequences": result.n_leaves, "width": msa.shape[1],
               "backend": result.backend, "requested_backend": args.backend,
               "tree_seconds": result.timings["total_seconds"],

@@ -1,0 +1,43 @@
+"""repro.obs — unified tracing, metrics, and profiling.
+
+Three dependency-free layers shared by every subsystem:
+
+  metrics   process-wide registry of counters / gauges / histograms with
+            a Prometheus text renderer (``GET /metrics``) and JSON
+            snapshots (embedded in BENCH_* artifacts)
+  trace     nestable ``span()`` context managers -> Chrome-trace JSON,
+            with per-request trace-ID propagation and an optional
+            ``jax.profiler`` bridge
+  runtime   device/host memory gauges sampled at root-span boundaries
+
+``obs.disabled()`` switches the whole layer off for a block — the
+overhead-guardrail benchmarks use it to compare instrumented vs bare
+runs of the same code.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Iterator
+
+from . import export, metrics, runtime, trace
+from .metrics import REGISTRY, counter, gauge, histogram, parse_exposition
+from .trace import (TRACER, chrome_coverage, current_trace_id,
+                    enable_jax_annotations, new_trace_id, request_trace, span)
+
+__all__ = [
+    "metrics", "trace", "runtime", "export",
+    "REGISTRY", "counter", "gauge", "histogram", "parse_exposition",
+    "TRACER", "span", "request_trace", "current_trace_id", "new_trace_id",
+    "enable_jax_annotations", "chrome_coverage", "disabled",
+]
+
+
+@contextlib.contextmanager
+def disabled() -> Iterator[None]:
+    """Turn all metric writes and span recording off for the block."""
+    prev_m, prev_t = REGISTRY.enabled, TRACER.enabled
+    REGISTRY.enabled = TRACER.enabled = False
+    try:
+        yield
+    finally:
+        REGISTRY.enabled, TRACER.enabled = prev_m, prev_t

@@ -1,0 +1,64 @@
+"""Device/host memory gauges, sampled at root-span boundaries.
+
+``sample()`` refreshes:
+
+  repro_device_live_bytes   sum of nbytes over ``jax.live_arrays()``
+  repro_host_peak_rss_bytes ``ru_maxrss`` of this process
+
+Sampling is rate-limited (``MIN_INTERVAL`` seconds) because
+``jax.live_arrays()`` walks every live buffer; ``trace.span`` calls
+``maybe_sample()`` whenever a root span closes, so long-running
+pipelines get a free memory timeline without any per-span cost.  jax is
+imported lazily inside the sampler — importing this module stays
+dependency-free.
+
+Tile-accountant bytes (``repro_tile_resident_bytes``) and cache bytes
+(``repro_cache_bytes``) are pushed by their owners
+(``repro.phylo.tiles.TileAccountant`` / ``repro.serve.cache.ResultCache``)
+rather than pulled here, since only the owners see alloc/free edges.
+"""
+from __future__ import annotations
+
+import time
+
+from . import metrics as _metrics
+
+__all__ = ["sample", "maybe_sample", "MIN_INTERVAL"]
+
+MIN_INTERVAL = 1.0
+
+_G_DEVICE = _metrics.gauge(
+    "repro_device_live_bytes", "bytes held by live jax arrays")
+_G_RSS = _metrics.gauge(
+    "repro_host_peak_rss_bytes", "peak resident set size of this process")
+
+_last_sample = 0.0
+
+
+def sample(force: bool = True) -> None:
+    """Refresh memory gauges now (``force=False`` honours the rate limit)."""
+    global _last_sample
+    if not _metrics.REGISTRY.enabled:
+        return
+    now = time.monotonic()
+    if not force and now - _last_sample < MIN_INTERVAL:
+        return
+    _last_sample = now
+    try:
+        import sys
+        jax = sys.modules.get("jax")  # never *trigger* the import
+        if jax is not None and hasattr(jax, "live_arrays"):
+            _G_DEVICE.set(float(sum(
+                getattr(a, "nbytes", 0) or 0 for a in jax.live_arrays())))
+    except Exception:
+        pass
+    try:
+        import resource
+        ru = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+        _G_RSS.set(float(ru) * 1024.0)  # linux reports KiB
+    except Exception:
+        pass
+
+
+def maybe_sample() -> None:
+    sample(force=False)

@@ -41,7 +41,13 @@ from ..core import cluster as cluster_mod
 from ..core import distance as dist_mod
 from ..core import nj as nj_mod
 from ..core import treeio
+from ..obs import metrics as _obs
+from ..obs import trace as _trace
 from . import pipeline, tiles
+
+_M_BUILDS = _obs.counter("repro_tree_builds_total",
+                         "tree reconstructions by effective backend",
+                         ("backend",))
 
 TREE_BACKENDS = ("auto", "dense", "tiled", "cluster")
 REFINE_MODES = ("none", "ml")
@@ -175,66 +181,82 @@ class TreeEngine:
             raise ValueError(f"need >= 2 sequences for a tree, got {n}")
         eff = self.resolve(n)
         acct = accountant or tiles.TileAccountant()
+
+        # `timings` entries are views over the span durations below — the
+        # spans are the source of truth; perf_counter deltas back them up
+        # only when tracing is disabled (span() yields None).
+        timings: Dict[str, float] = {}
         t0 = time.perf_counter()
+        with _trace.span("tree", backend=eff, n=n) as sp_total:
+            with _trace.span("tree.distance", backend=eff, n=n):
+                if eff == "dense":
+                    D = dist_mod.distance_matrix(jnp.asarray(msa_np),
+                                                 gap_code=self.gap_code,
+                                                 n_chars=self.n_chars,
+                                                 correct=self.correct)
+                    children, blen, root = nj_mod.host_tree(
+                        nj_mod.neighbor_joining(D, n))
+                elif eff == "tiled-exact":
+                    ctx = self.tile_ctx(acct)
+                    D = ctx.full(msa_np)
+                    children, blen, root = nj_mod.host_tree(
+                        nj_mod.neighbor_joining(jnp.asarray(D), n))
+                    ctx.release(D)
+                elif eff == "tiled":
+                    cp = pipeline.tiled_phylogeny(msa_np,
+                                                  tiles=self.tile_ctx(acct),
+                                                  cfg=self.cluster_cfg())
+                    children, blen, root = cp.children, cp.blen, cp.root
+                else:   # cluster
+                    cp = cluster_mod.cluster_phylogeny(
+                        msa_np, gap_code=self.gap_code, n_chars=self.n_chars,
+                        cfg=self.cluster_cfg())
+                    children, blen, root = cp.children, cp.blen, cp.root
 
-        if eff == "dense":
-            D = dist_mod.distance_matrix(jnp.asarray(msa_np),
-                                         gap_code=self.gap_code,
-                                         n_chars=self.n_chars,
-                                         correct=self.correct)
-            children, blen, root = nj_mod.host_tree(
-                nj_mod.neighbor_joining(D, n))
-        elif eff == "tiled-exact":
-            ctx = self.tile_ctx(acct)
-            D = ctx.full(msa_np)
-            children, blen, root = nj_mod.host_tree(
-                nj_mod.neighbor_joining(jnp.asarray(D), n))
-            ctx.release(D)
-        elif eff == "tiled":
-            cp = pipeline.tiled_phylogeny(msa_np, tiles=self.tile_ctx(acct),
-                                          cfg=self.cluster_cfg())
-            children, blen, root = cp.children, cp.blen, cp.root
-        else:   # cluster
-            cp = cluster_mod.cluster_phylogeny(msa_np, gap_code=self.gap_code,
-                                               n_chars=self.n_chars,
-                                               cfg=self.cluster_cfg())
-            children, blen, root = cp.children, cp.blen, cp.root
+            tile_stats = None
+            if eff.startswith("tiled"):
+                tile_stats = dict(acct.stats(),
+                                  row_block_bytes=self.row_block * n * 4)
 
-        timings = {"total_seconds": time.perf_counter() - t0}
-        tile_stats = None
-        if eff.startswith("tiled"):
-            tile_stats = dict(acct.stats(),
-                              row_block_bytes=self.row_block * n * 4)
-
-        logl = model = support = bic = n_nni = None
-        if self.refine == "ml":
-            from ..core import likelihood as lik
-            from .ml import MLRefiner
-            refiner = MLRefiner(gap_code=self.gap_code, n_chars=self.n_chars,
-                                correct=self.correct,
-                                model=self.model, steps=self.ml_steps,
-                                nni_rounds=self.nni_rounds, seed=self.seed,
-                                mesh=self.mesh)
-            # compress once; refine and bootstrap share the patterns
-            patterns, weights = lik.compress_patterns(msa_np)
-            t1 = time.perf_counter()
-            mlres = refiner.refine(msa_np, children, blen, root,
-                                   patterns=patterns, weights=weights)
-            children, blen, root = mlres.children, mlres.blen, mlres.root
-            logl = {"initial": mlres.logl_init, "final": mlres.logl_final}
-            model = mlres.model
-            bic = mlres.bic
-            n_nni = mlres.n_nni
-            timings["refine_seconds"] = time.perf_counter() - t1
-            if self.bootstrap > 0:
+            logl = model = support = bic = n_nni = None
+            if self.refine == "ml":
+                from ..core import likelihood as lik
+                from .ml import MLRefiner
+                refiner = MLRefiner(gap_code=self.gap_code,
+                                    n_chars=self.n_chars,
+                                    correct=self.correct,
+                                    model=self.model, steps=self.ml_steps,
+                                    nni_rounds=self.nni_rounds,
+                                    seed=self.seed, mesh=self.mesh)
+                # compress once; refine and bootstrap share the patterns
+                patterns, weights = lik.compress_patterns(msa_np)
                 t1 = time.perf_counter()
-                support = refiner.bootstrap(msa_np, children, blen, root,
-                                            self.bootstrap,
-                                            patterns=patterns,
-                                            weights=weights)
-                timings["bootstrap_seconds"] = time.perf_counter() - t1
-            eff = f"{eff}+ml"
-            timings["total_seconds"] = time.perf_counter() - t0
+                with _trace.span("tree.refine", model=self.model) as sp_ref:
+                    mlres = refiner.refine(msa_np, children, blen, root,
+                                           patterns=patterns, weights=weights)
+                children, blen, root = mlres.children, mlres.blen, mlres.root
+                logl = {"initial": mlres.logl_init, "final": mlres.logl_final}
+                model = mlres.model
+                bic = mlres.bic
+                n_nni = mlres.n_nni
+                timings["refine_seconds"] = (
+                    sp_ref.duration if sp_ref is not None
+                    else time.perf_counter() - t1)
+                if self.bootstrap > 0:
+                    t1 = time.perf_counter()
+                    with _trace.span("tree.bootstrap",
+                                     replicates=self.bootstrap) as sp_bs:
+                        support = refiner.bootstrap(msa_np, children, blen,
+                                                    root, self.bootstrap,
+                                                    patterns=patterns,
+                                                    weights=weights)
+                    timings["bootstrap_seconds"] = (
+                        sp_bs.duration if sp_bs is not None
+                        else time.perf_counter() - t1)
+                eff = f"{eff}+ml"
+        timings["total_seconds"] = (sp_total.duration if sp_total is not None
+                                    else time.perf_counter() - t0)
+        _M_BUILDS.labels(backend=eff).inc()
 
         result = PhyloResult(np.asarray(children), np.asarray(blen),
                              int(root), n, eff, self.backend, timings,

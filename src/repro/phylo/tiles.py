@@ -36,6 +36,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import distance as dist_mod
+from ..obs import metrics as _obs
+
+_G_RESIDENT = _obs.gauge("repro_tile_resident_bytes",
+                         "distance bytes currently resident (last accountant)")
+_C_TILES = _obs.counter("repro_tiles_total", "distance tiles materialized")
+_C_TILE_BYTES = _obs.counter("repro_tile_bytes_total",
+                             "distance bytes materialized, cumulative")
 
 
 class TileAccountant:
@@ -59,10 +66,14 @@ class TileAccountant:
         self.peak = max(self.peak, self.resident)
         self.n_tiles += 1
         self.total_bytes += nbytes
+        _C_TILES.inc()
+        _C_TILE_BYTES.inc(nbytes)
+        _G_RESIDENT.set(self.resident)
         return nbytes
 
     def free(self, nbytes: int) -> None:
         self.resident -= int(nbytes)
+        _G_RESIDENT.set(self.resident)
 
     def stats(self) -> dict:
         return {"peak_resident_bytes": self.peak,

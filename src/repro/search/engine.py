@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import List, Optional, Sequence
 
 import jax
@@ -36,8 +37,20 @@ import numpy as np
 
 from ..core import alphabet as ab
 from ..core import kmer_index
+from ..obs import metrics as _obs
+from ..obs import trace as _trace
 from . import evalue as ev
 from .index import SearchIndex
+
+_C_QUERIES = _obs.counter("repro_search_queries_total", "queries searched")
+_C_PAIRS = _obs.counter("repro_search_pairs_total",
+                        "(query, db row) pairs considered by the prefilter")
+_C_CAND = _obs.counter("repro_search_candidates_total",
+                       "pairs surviving the seed prefilter into rescoring")
+_G_SURVIVAL = _obs.gauge("repro_search_survival_ratio",
+                         "prefilter survival of the last search call")
+_H_RESCORE = _obs.histogram("repro_search_rescore_seconds",
+                            "wall-clock of the DP rescoring stage")
 
 
 @functools.partial(jax.jit, static_argnames=("k", "stride", "max_anchors",
@@ -179,19 +192,31 @@ class SearchEngine:
         names = list(names)
         Q, qlens = self._encode_queries(seqs)
         B = Q.shape[0]
-        counts = self.seed_counts(Q, qlens, index)          # (B, D)
+        with _trace.span("search.seed", n_queries=B, db_seqs=index.n_seqs,
+                         seed="mesh" if self.mesh is not None else "host"):
+            counts = self.seed_counts(Q, qlens, index)      # (B, D)
 
         cand = (np.ones_like(counts, bool) if exhaustive
                 else counts >= cfg.min_anchors)
         qi, di = np.nonzero(cand)                            # row-major:
         n_cand = len(qi)                                     # deterministic
+        _C_QUERIES.inc(B)
+        _C_PAIRS.inc(B * index.n_seqs)
+        _C_CAND.inc(n_cand)
+        _G_SURVIVAL.set(n_cand / max(B * index.n_seqs, 1))
 
         per_query: List[List[dict]] = [[] for _ in range(B)]
         n_calls = 0
         if n_cand:
             engine = cfg.engine()
-            res = engine.align_pairs(Q[qi], qlens[qi],
-                                     index.S[di], index.lens[di])
+            t0 = time.perf_counter()
+            with _trace.span("search.rescore", pairs=n_cand) as sp:
+                res = engine.align_pairs(Q[qi], qlens[qi],
+                                         index.S[di], index.lens[di])
+                if sp is not None:
+                    jax.block_until_ready(res.score)
+            _H_RESCORE.observe(sp.duration if sp is not None
+                               else time.perf_counter() - t0)
             n_calls = res.n_calls
             scores = np.asarray(res.score, np.float32)
             gap = cfg.alpha().gap_code

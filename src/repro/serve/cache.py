@@ -18,6 +18,16 @@ import threading
 from collections import OrderedDict
 from typing import List, Optional, Sequence, Tuple
 
+from ..obs import metrics as _obs
+
+_C_LOOKUPS = _obs.counter("repro_cache_requests_total",
+                          "cache lookups by outcome", ("outcome",))
+_C_EVICTIONS = _obs.counter("repro_cache_evictions_total", "LRU evictions")
+_G_BYTES = _obs.gauge("repro_cache_bytes",
+                      "payload bytes resident (last cache instance)")
+_G_ITEMS = _obs.gauge("repro_cache_items",
+                      "entries resident (last cache instance)")
+
 
 def canonicalize(seqs: Sequence[str]) -> Tuple[List[str], List[int]]:
     """Sort sequences; returns (sorted_seqs, perm) with seqs[perm[i]] ==
@@ -61,14 +71,23 @@ class ResultCache:
         self._evictions = 0
         self._lock = threading.Lock()
 
+    @property
+    def lock(self) -> threading.Lock:
+        """The cache's own lock — exposed so a caller can combine this
+        cache's stats with another component's under one acquisition
+        (``MSAService.stats_snapshot``)."""
+        return self._lock
+
     def get(self, key: str):
         with self._lock:
             ent = self._d.get(key)
             if ent is None:
                 self._misses += 1
+                _C_LOOKUPS.labels(outcome="miss").inc()
                 return None
             self._d.move_to_end(key)
             self._hits += 1
+            _C_LOOKUPS.labels(outcome="hit").inc()
             return ent[0]
 
     def peek(self, key: str):
@@ -89,9 +108,16 @@ class ResultCache:
                 _, (_, nb) = self._d.popitem(last=False)
                 self._bytes -= nb
                 self._evictions += 1
+                _C_EVICTIONS.inc()
+            _G_BYTES.set(self._bytes)
+            _G_ITEMS.set(len(self._d))
+
+    def stats_locked(self) -> dict:
+        """Stats snapshot; caller must hold ``self.lock``."""
+        return {"hits": self._hits, "misses": self._misses,
+                "items": len(self._d), "bytes": self._bytes,
+                "evictions": self._evictions}
 
     def stats(self) -> dict:
         with self._lock:
-            return {"hits": self._hits, "misses": self._misses,
-                    "items": len(self._d), "bytes": self._bytes,
-                    "evictions": self._evictions}
+            return self.stats_locked()

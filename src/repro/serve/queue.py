@@ -26,6 +26,21 @@ from typing import Dict, List, NamedTuple, Optional, Tuple
 
 import numpy as np
 
+from ..obs import metrics as _obs
+from ..obs import trace as _trace
+
+_H_WAIT = _obs.histogram(
+    "repro_queue_wait_seconds", "submit-to-batch-start wait per job",
+    buckets=(0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25,
+             0.5, 1.0, 2.5))
+_H_OCCUPANCY = _obs.histogram(
+    "repro_batch_pairs", "pairs per coalesced batch",
+    buckets=(1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024))
+_C_FAILED_BATCHES = _obs.counter("repro_failed_batches_total",
+                                 "coalesced batches whose engine call failed")
+_C_FAILED_PAIRS = _obs.counter("repro_failed_pairs_total",
+                               "pairs failed with their batch")
+
 
 @dataclasses.dataclass
 class AlignJob:
@@ -57,7 +72,8 @@ class CoalescingAligner:
         self._closing = False
         self._stats = {"jobs": 0, "pairs": 0, "batches": 0,
                        "engine_calls": 0, "coalesced_jobs": 0,
-                       "fallback_pairs": 0}
+                       "fallback_pairs": 0, "failed_batches": 0,
+                       "failed_pairs": 0}
         self._in_flight = 0
         self._worker = threading.Thread(target=self._loop,
                                         name="coalescing-aligner",
@@ -93,9 +109,20 @@ class CoalescingAligner:
             self._cond.notify()
         self._worker.join()
 
+    @property
+    def lock(self) -> threading.Condition:
+        """The queue's own lock, exposed for combined atomic snapshots
+        (``MSAService.stats_snapshot`` holds it together with the cache
+        lock so ``/healthz`` numbers come from one instant)."""
+        return self._cond
+
+    def stats_locked(self) -> dict:
+        """Stats snapshot; caller must hold ``self.lock``."""
+        return dict(self._stats, in_flight=self._in_flight)
+
     def stats(self) -> dict:
         with self._cond:
-            return dict(self._stats, in_flight=self._in_flight)
+            return self.stats_locked()
 
     # ------------------------------------------------------------ worker
 
@@ -132,32 +159,41 @@ class CoalescingAligner:
     def _run_batch(self, items):
         jobs = [j for _, j, _ in items]
         futs = [f for _, _, f in items]
+        now = time.monotonic()
+        wait_budget = self.max_wait_ms / 1e3
+        for deadline, _, _ in items:
+            # submit time is deadline - max_wait, so no tuple change needed
+            _H_WAIT.observe(max(now - (deadline - wait_budget), 0.0))
+        n_pairs = sum(int(j.Q.shape[0]) for j in jobs)
         try:
-            engine = jobs[0].engine
-            gap = engine.gap_code
-            counts = [int(j.Q.shape[0]) for j in jobs]
-            B = sum(counts)
-            Lq = max(int(j.Q.shape[1]) for j in jobs)
-            Lt = max(int(j.tlen) for j in jobs)
-            Q = np.full((B, Lq), gap, np.int8)
-            T = np.full((B, Lt), gap, np.int8)
-            qlens = np.zeros((B,), np.int32)
-            tlens = np.zeros((B,), np.int32)
-            off = 0
-            for j, c in zip(jobs, counts):
-                Q[off:off + c, : j.Q.shape[1]] = np.asarray(j.Q)
-                T[off:off + c, : j.tlen] = np.asarray(j.target)[: j.tlen]
-                qlens[off:off + c] = np.asarray(j.qlens)
-                tlens[off:off + c] = j.tlen
-                off += c
+            with _trace.span("serve.batch", jobs=len(jobs), pairs=n_pairs,
+                             engine_key=jobs[0].engine_key):
+                engine = jobs[0].engine
+                gap = engine.gap_code
+                counts = [int(j.Q.shape[0]) for j in jobs]
+                B = sum(counts)
+                Lq = max(int(j.Q.shape[1]) for j in jobs)
+                Lt = max(int(j.tlen) for j in jobs)
+                Q = np.full((B, Lq), gap, np.int8)
+                T = np.full((B, Lt), gap, np.int8)
+                qlens = np.zeros((B,), np.int32)
+                tlens = np.zeros((B,), np.int32)
+                off = 0
+                for j, c in zip(jobs, counts):
+                    Q[off:off + c, : j.Q.shape[1]] = np.asarray(j.Q)
+                    T[off:off + c, : j.tlen] = np.asarray(j.target)[: j.tlen]
+                    qlens[off:off + c] = np.asarray(j.qlens)
+                    tlens[off:off + c] = j.tlen
+                    off += c
 
-            res = engine.align_pairs(Q, qlens, T, tlens)
-            a_rows = np.asarray(res.a_row)
-            b_rows = np.asarray(res.b_row)
-            score = np.asarray(res.score)
-            aln_len = np.asarray(res.aln_len)
+                res = engine.align_pairs(Q, qlens, T, tlens)
+                a_rows = np.asarray(res.a_row)
+                b_rows = np.asarray(res.b_row)
+                score = np.asarray(res.score)
+                aln_len = np.asarray(res.aln_len)
             meta = {"batch_jobs": len(jobs), "batch_pairs": B,
                     "engine_calls": int(res.n_calls)}
+            _H_OCCUPANCY.observe(B)
             with self._cond:
                 self._stats["batches"] += 1
                 self._stats["engine_calls"] += int(res.n_calls)
@@ -171,7 +207,12 @@ class CoalescingAligner:
                                          b_rows[off:off + c],
                                          aln_len[off:off + c], meta))
                 off += c
-        except BaseException as e:                 # pragma: no cover
+        except BaseException as e:
+            _C_FAILED_BATCHES.inc()
+            _C_FAILED_PAIRS.inc(n_pairs)
+            with self._cond:
+                self._stats["failed_batches"] += 1
+                self._stats["failed_pairs"] += n_pairs
             for fut in futs:
                 if not fut.done():
                     fut.set_exception(e)

@@ -19,7 +19,15 @@ The request dataflow (docs/ARCHITECTURE.md has the full map):
                    DP rescore + e-value gates), content-hash cached
                    like ``/align`` — requires a configured
                    ``ServiceConfig.search_index``
-  GET  /healthz    liveness + cache / queue stats
+  GET  /healthz    liveness + cache / queue stats (one atomic snapshot)
+  GET  /metrics    Prometheus text exposition of the ``repro.obs`` registry
+  GET  /statusz    human-readable service snapshot (plain text)
+
+Every request runs under ``repro.obs``: a fresh trace ID is opened per
+request (returned as ``trace_id`` in each JSON response, stamped on every
+span the request produces), request counters reconcile as
+``started == finished + rejected``, and latency histograms cover the
+request and the coalescer's queue wait / batch occupancy.
 
 Big requests compose with ``repro.dist``: with a mesh configured,
 families of ``dist_threshold`` or more sequences route through
@@ -34,6 +42,7 @@ wires to SIGINT/SIGTERM.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import io
 import json
@@ -41,7 +50,7 @@ import threading
 import time
 from collections import OrderedDict
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-from typing import List, Optional, Sequence, Tuple
+from typing import Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -49,10 +58,23 @@ from ..core import msa as msa_mod
 from ..core.msa import MSAConfig
 from ..data import iter_fasta
 from ..data.fasta import _normalize_seq
+from ..obs import metrics as _obs
+from ..obs import trace as _trace
 from ..phylo import TreeEngine
 from . import incremental
 from .cache import ResultCache, canonical_key, canonicalize
 from .queue import AlignJob, CoalescingAligner
+
+_M_STARTED = _obs.counter("repro_requests_started_total",
+                          "requests received (accepted + rejected)",
+                          ("endpoint",))
+_M_FINISHED = _obs.counter("repro_requests_finished_total",
+                           "requests completed", ("endpoint", "status"))
+_M_REJECTED = _obs.counter("repro_requests_rejected_total",
+                           "requests refused while draining", ("endpoint",))
+_H_LATENCY = _obs.histogram("repro_request_seconds",
+                            "request wall-clock", ("endpoint",))
+_G_ACTIVE = _obs.gauge("repro_requests_active", "requests currently in flight")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -142,6 +164,8 @@ class MSAService:
         self.tree_cache: OrderedDict = OrderedDict()
         self._tree_lock = threading.Lock()
         self._draining = False
+        self._active = 0
+        self._active_cond = threading.Condition()
         self._t0 = time.time()
         self.search_engine = None
         self._search_db_fp = None
@@ -155,9 +179,40 @@ class MSAService:
 
     # ----------------------------------------------------------- helpers
 
-    def _check_open(self):
-        if self._draining:
-            raise RuntimeError("service is draining")
+    @contextlib.contextmanager
+    def _request(self, endpoint: str) -> Iterator[str]:
+        """Per-request accounting + trace scope.
+
+        Counts reconcile as ``started == finished + rejected`` whenever the
+        service is idle; ``drain()`` waits on the active count this context
+        maintains, so a request inside this block can never be cut off by
+        shutdown.  Yields the request's trace ID (every span opened inside
+        inherits it; the HTTP layer returns it to the client).
+        """
+        _M_STARTED.labels(endpoint=endpoint).inc()
+        with self._active_cond:
+            if self._draining:
+                _M_REJECTED.labels(endpoint=endpoint).inc()
+                raise RuntimeError("service is draining")
+            self._active += 1
+            _G_ACTIVE.set(self._active)
+        t0 = time.perf_counter()
+        status = "ok"
+        try:
+            with _trace.request_trace() as tid:
+                with _trace.span(f"serve.{endpoint}"):
+                    yield tid
+        except BaseException:
+            status = "error"
+            raise
+        finally:
+            _H_LATENCY.labels(endpoint=endpoint).observe(
+                time.perf_counter() - t0)
+            _M_FINISHED.labels(endpoint=endpoint, status=status).inc()
+            with self._active_cond:
+                self._active -= 1
+                _G_ACTIVE.set(self._active)
+                self._active_cond.notify_all()
 
     def _decode_rows(self, msa) -> List[str]:
         return [self.alpha.decode(r) for r in np.asarray(msa)]
@@ -236,7 +291,10 @@ class MSAService:
         return key, entry, cached, perm
 
     def align(self, names: Sequence[str], seqs: Sequence[str]) -> dict:
-        self._check_open()
+        with self._request("align") as tid:
+            return dict(self._align_impl(names, seqs), trace_id=tid)
+
+    def _align_impl(self, names: Sequence[str], seqs: Sequence[str]) -> dict:
         t0 = time.perf_counter()
         names, seqs = list(names), list(seqs)
         key, entry, cached, perm = self._align_entry(names, seqs)
@@ -256,7 +314,12 @@ class MSAService:
 
     def align_add(self, msa_id: str, names: Sequence[str],
                   seqs: Sequence[str]) -> dict:
-        self._check_open()
+        with self._request("align_add") as tid:
+            return dict(self._align_add_impl(msa_id, names, seqs),
+                        trace_id=tid)
+
+    def _align_add_impl(self, msa_id: str, names: Sequence[str],
+                        seqs: Sequence[str]) -> dict:
         t0 = time.perf_counter()
         parent = self.cache.peek(msa_id)
         if parent is None:
@@ -297,15 +360,18 @@ class MSAService:
                 "cache": self.cache.stats(),
                 "elapsed_ms": (time.perf_counter() - t0) * 1e3}
 
-    def tree(self, msa_id: Optional[str] = None,
-             names: Optional[Sequence[str]] = None,
-             seqs: Optional[Sequence[str]] = None,
-             backend: Optional[str] = None,
-             refine: Optional[str] = None,
-             model: Optional[str] = None,
-             bootstrap: Optional[int] = None,
-             seed: Optional[int] = None) -> dict:
-        self._check_open()
+    def tree(self, msa_id: Optional[str] = None, **kw) -> dict:
+        with self._request("tree") as tid:
+            return dict(self._tree_impl(msa_id=msa_id, **kw), trace_id=tid)
+
+    def _tree_impl(self, msa_id: Optional[str] = None,
+                   names: Optional[Sequence[str]] = None,
+                   seqs: Optional[Sequence[str]] = None,
+                   backend: Optional[str] = None,
+                   refine: Optional[str] = None,
+                   model: Optional[str] = None,
+                   bootstrap: Optional[int] = None,
+                   seed: Optional[int] = None) -> dict:
         t0 = time.perf_counter()
         if msa_id is None:
             if not seqs:
@@ -378,7 +444,16 @@ class MSAService:
         order through the canonicalization permutation (same contract
         as ``/align``).
         """
-        self._check_open()
+        with self._request("search") as tid:
+            return dict(self._search_impl(names, seqs, max_hits=max_hits,
+                                          min_coverage=min_coverage,
+                                          max_evalue=max_evalue),
+                        trace_id=tid)
+
+    def _search_impl(self, names: Sequence[str], seqs: Sequence[str], *,
+                     max_hits: Optional[int] = None,
+                     min_coverage: Optional[float] = None,
+                     max_evalue: Optional[float] = None) -> dict:
         if self.search_engine is None:
             raise ValueError("no search database configured "
                              "(serve_msa --search-db)")
@@ -418,21 +493,77 @@ class MSAService:
                 "cache": self.cache.stats(),
                 "elapsed_ms": (time.perf_counter() - t0) * 1e3}
 
+    def stats_snapshot(self) -> dict:
+        """Cache + queue stats from one instant.
+
+        Both locks are held together (cache first, then queue — the one
+        fixed order in the codebase, so no deadlock is possible) instead
+        of reading ``cache.stats()`` and ``coalescer.stats()`` at
+        different times, which could disagree under load.
+        """
+        with self.cache.lock:
+            with self.coalescer.lock:
+                return {"cache": self.cache.stats_locked(),
+                        "queue": self.coalescer.stats_locked()}
+
     def healthz(self) -> dict:
+        snap = self.stats_snapshot()
         return {"status": "draining" if self._draining else "ok",
                 "uptime_s": round(time.time() - self._t0, 3),
                 "alphabet": self.cfg.alphabet, "method": self.cfg.method,
                 "backend": self.engine.backend,
-                "cache": self.cache.stats(),
-                "queue": self.coalescer.stats(),
+                "active_requests": self._active,
+                "cache": snap["cache"],
+                "queue": snap["queue"],
                 "search_db": (self.cfg.search_index.n_seqs
                               if self.cfg.search_index is not None
                               else None)}
 
-    def drain(self):
-        """Refuse new work, finish everything in flight, flush the queue."""
-        self._draining = True
+    def statusz(self) -> str:
+        """Human-readable plain-text snapshot (``GET /statusz``)."""
+        h = self.healthz()
+        lines = [
+            "repro.serve statusz",
+            f"status           {h['status']}",
+            f"uptime_s         {h['uptime_s']}",
+            f"config           alphabet={h['alphabet']} method={h['method']}"
+            f" backend={h['backend']}",
+            f"active_requests  {h['active_requests']}",
+            f"search_db_seqs   {h['search_db']}",
+            "",
+            "cache   " + " ".join(f"{k}={v}" for k, v in h["cache"].items()),
+            "queue   " + " ".join(f"{k}={v}" for k, v in h["queue"].items()),
+            "",
+            "requests (started == finished + rejected):",
+        ]
+        snap = _obs.REGISTRY.snapshot()
+        for fam in ("repro_requests_started_total",
+                    "repro_requests_finished_total",
+                    "repro_requests_rejected_total"):
+            for s in snap.get(fam, {}).get("samples", []):
+                lbl = ",".join(f"{k}={v}" for k, v in s["labels"].items())
+                lines.append(f"  {fam}{{{lbl}}} {int(s['value'])}")
+        lines.append("")
+        lines.append("recent root spans:")
+        roots = [r for r in _trace.TRACER.spans() if r.parent_id is None]
+        for r in roots[-10:]:
+            lines.append(f"  {r.name:<16} {r.duration * 1e3:9.2f} ms"
+                         f"  trace_id={r.trace_id}")
+        return "\n".join(lines) + "\n"
+
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Refuse new work, wait for in-flight requests, flush the queue.
+
+        Blocks until every request that entered ``_request`` before the
+        drain flag flipped has finished (or ``timeout`` elapses); then
+        drains the coalescer. Returns False only on timeout.
+        """
+        with self._active_cond:
+            self._draining = True
+            done = self._active_cond.wait_for(lambda: self._active == 0,
+                                              timeout)
         self.coalescer.close()
+        return done
 
 
 # ------------------------------------------------------------- HTTP layer
@@ -452,6 +583,15 @@ class _Handler(BaseHTTPRequestHandler):
         self.end_headers()
         self.wfile.write(data)
 
+    def _send_text(self, code: int, text: str,
+                   content_type: str = "text/plain; charset=utf-8"):
+        data = text.encode()
+        self.send_response(code)
+        self.send_header("Content-Type", content_type)
+        self.send_header("Content-Length", str(len(data)))
+        self.end_headers()
+        self.wfile.write(data)
+
     def _payload(self) -> dict:
         n = int(self.headers.get("Content-Length", 0) or 0)
         body = self.rfile.read(n) if n else b""
@@ -460,6 +600,12 @@ class _Handler(BaseHTTPRequestHandler):
     def do_GET(self):
         if self.path == "/healthz":
             self._send(200, self.server.service.healthz())
+        elif self.path == "/metrics":
+            # the content type Prometheus scrapers expect for text format
+            self._send_text(200, _obs.REGISTRY.render(),
+                            "text/plain; version=0.0.4; charset=utf-8")
+        elif self.path == "/statusz":
+            self._send_text(200, self.server.service.statusz())
         else:
             self._send(404, {"error": f"unknown path {self.path}"})
 

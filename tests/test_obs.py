@@ -1,0 +1,333 @@
+"""Executable spec of repro.obs (ISSUE 8): metrics registry semantics,
+span nesting + trace-ID propagation, launcher trace coverage, the
+coalescer's failed-batch accounting, and graceful drain with in-flight
+HTTP requests (metrics must reconcile: started == finished + rejected).
+"""
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.obs import REGISTRY, TRACER, chrome_coverage, disabled
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import MetricsRegistry, parse_exposition
+from repro.serve import AlignJob, CoalescingAligner, MSAService, \
+    ServiceConfig, serve_http
+
+
+def _total(name: str) -> float:
+    """Sum of a counter/gauge family's samples in the global registry."""
+    snap = REGISTRY.snapshot()
+    return sum(s["value"]
+               for s in snap.get(name, {"samples": []})["samples"])
+
+
+# ------------------------------------------------------------------ metrics
+
+def test_counter_gauge_render_parse_roundtrip():
+    reg = MetricsRegistry()
+    c = reg.counter("t_requests_total", "requests", ("endpoint",))
+    c.labels(endpoint="align").inc()
+    c.labels(endpoint="align").inc(2)
+    c.labels(endpoint="tree").inc()
+    g = reg.gauge("t_active", "in flight")
+    g.set(3)
+    g.dec()
+    text = reg.render()
+    fams = parse_exposition(text)
+    assert fams["t_requests_total"]["type"] == "counter"
+    by_ep = {s["labels"]["endpoint"]: s["value"]
+             for s in fams["t_requests_total"]["samples"]}
+    assert by_ep == {"align": 3.0, "tree": 1.0}
+    (g_sample,) = fams["t_active"]["samples"]
+    assert g_sample["value"] == 2.0
+
+
+def test_histogram_buckets_cumulative_in_exposition():
+    reg = MetricsRegistry()
+    h = reg.histogram("t_seconds", "latency", buckets=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.5, 0.5, 5.0, 50.0):
+        h.observe(v)
+    fams = parse_exposition(reg.render())
+    series = {(s["series"], s["labels"].get("le")): s["value"]
+              for s in fams["t_seconds"]["samples"]}
+    assert series[("t_seconds_bucket", "0.1")] == 1
+    assert series[("t_seconds_bucket", "1")] == 3       # cumulative
+    assert series[("t_seconds_bucket", "10")] == 4
+    assert series[("t_seconds_bucket", "+Inf")] == 5
+    assert series[("t_seconds_count", None)] == 5
+    assert series[("t_seconds_sum", None)] == pytest.approx(56.05)
+    # the snapshot view folds the same numbers into a dict
+    (snap,) = reg.snapshot()["t_seconds"]["samples"]
+    assert snap["count"] == 5 and snap["buckets"]["1"] == 3
+
+
+def test_family_schema_conflicts_raise():
+    reg = MetricsRegistry()
+    reg.counter("t_x", "a", ("k",))
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("t_x")
+    with pytest.raises(ValueError, match="already registered"):
+        reg.counter("t_x", "a", ("other",))
+    with pytest.raises(ValueError, match="labels"):
+        reg.counter("t_x", "a", ("k",)).labels(wrong="v")
+
+
+def test_parse_exposition_rejects_malformed():
+    with pytest.raises(ValueError):
+        parse_exposition('t_x{k="v" 1\n')          # unbalanced braces
+    with pytest.raises(ValueError):
+        parse_exposition("t_x\n")                  # missing value
+
+
+def test_disabled_makes_writes_noops():
+    reg = MetricsRegistry()
+    c = reg.counter("t_c", "c")
+    before = len(TRACER.spans())
+    with disabled():
+        # the global switch only covers the global registry; flip this
+        # private one by hand to exercise the same path
+        reg.enabled = False
+        c.inc()
+        reg.enabled = True
+        with obs_trace.span("t_invisible") as sp:
+            assert sp is None
+    assert c.value == 0
+    assert len(TRACER.spans()) == before
+    assert all(r.name != "t_invisible" for r in TRACER.spans())
+
+
+# ------------------------------------------------------------------- spans
+
+def test_span_nesting_parent_ids_and_trace_id():
+    with obs_trace.request_trace("cafe0123deadbeef") as tid:
+        assert tid == "cafe0123deadbeef"
+        with obs_trace.span("t_outer", n=1) as outer:
+            with obs_trace.span("t_inner") as inner:
+                pass
+    assert outer.parent_id is None
+    assert inner.parent_id == outer.span_id
+    assert outer.trace_id == inner.trace_id == "cafe0123deadbeef"
+    assert obs_trace.current_trace_id() is None     # restored on exit
+    assert inner.duration >= 0
+    # every closed span feeds the repro_span_seconds histogram
+    snap = REGISTRY.snapshot()["repro_span_seconds"]["samples"]
+    assert any(s["labels"]["name"] == "t_inner" for s in snap)
+
+
+def test_chrome_trace_events_and_coverage():
+    with obs_trace.span("t_root"):
+        with obs_trace.span("t_kid_a"):
+            time.sleep(0.01)
+        with obs_trace.span("t_kid_b"):
+            time.sleep(0.01)
+    trace_obj = TRACER.chrome_trace()
+    cov, kids = chrome_coverage(trace_obj, "t_root")
+    assert {"t_kid_a", "t_kid_b"} <= kids
+    assert 0.5 < cov <= 1.0 + 1e-6
+    ev = next(e for e in trace_obj["traceEvents"] if e["name"] == "t_kid_a")
+    assert ev["ph"] == "X" and ev["dur"] >= 10_000 * 0.5   # us
+    assert "parent_id" in ev["args"]
+
+
+def test_runtime_sample_sets_rss_gauge():
+    from repro.obs import runtime
+    runtime.sample(force=True)
+    assert _total("repro_host_peak_rss_bytes") > 1 << 20
+
+
+# ------------------------------------------- launcher trace (acceptance)
+
+def test_msa_run_trace_covers_wallclock_with_named_stages(tmp_path):
+    """ISSUE 8 acceptance: msa_run --trace-out on the phi_dna fixture
+    produces a Chrome trace whose root span is >= 95% covered by named
+    stages (load -> center -> map1 -> assemble -> tree)."""
+    from repro.data.datasets import phi_dna
+    from repro.launch import msa_run
+
+    fam = phi_dna(scale=1)
+    fasta = tmp_path / "phi.fa"
+    fasta.write_text("".join(f">{n}\n{s}\n"
+                             for n, s in zip(fam.names, fam.seqs)))
+    trace_path = tmp_path / "trace.json"
+    metrics_path = tmp_path / "metrics.json"
+    msa_run.main(["--fasta", str(fasta), "--out", str(tmp_path / "out"),
+                  "--tree", "nj",
+                  "--trace-out", str(trace_path),
+                  "--metrics-out", str(metrics_path)])
+
+    trace_obj = json.loads(trace_path.read_text())
+    cov, kids = chrome_coverage(trace_obj, "msa_run")
+    assert {"load", "center", "map1", "assemble", "tree"} <= kids
+    assert cov >= 0.95, f"span tree covers only {cov:.1%} of msa_run"
+
+    snap = json.loads(metrics_path.read_text())
+    assert "repro_align_calls_total" in snap
+    assert "repro_tree_builds_total" in snap
+    assert snap["repro_span_seconds"]["type"] == "histogram"
+
+
+# ------------------------------------------------- coalescer failure path
+
+def test_failed_batch_fails_futures_and_counts():
+    """ISSUE 8 satellite: an engine failure inside _run_batch must fail
+    every affected future AND show up in stats + obs counters (this path
+    was previously `except BaseException: pragma: no cover`)."""
+    class BoomEngine:
+        gap_code = 5
+
+        def align_pairs(self, *a, **k):
+            raise RuntimeError("boom")
+
+    b0 = _total("repro_failed_batches_total")
+    p0 = _total("repro_failed_pairs_total")
+    co = CoalescingAligner(max_batch=2, max_wait_ms=1.0)
+    job = AlignJob(Q=np.zeros((2, 8), np.int8),
+                   qlens=np.full(2, 8, np.int32),
+                   target=np.zeros(8, np.int8), tlen=8,
+                   engine=BoomEngine(), engine_key="x")
+    fut = co.submit(job)
+    with pytest.raises(RuntimeError, match="boom"):
+        fut.result(timeout=30)
+    co.close()
+    st = co.stats()
+    assert st["failed_batches"] == 1
+    assert st["failed_pairs"] == 2
+    assert st["in_flight"] == 0
+    assert _total("repro_failed_batches_total") - b0 == 1
+    assert _total("repro_failed_pairs_total") - p0 == 2
+
+
+# ------------------------------------------------------- service + HTTP
+
+def test_stats_snapshot_is_one_combined_view():
+    svc = MSAService(ServiceConfig(max_wait_ms=1.0))
+    snap = svc.stats_snapshot()
+    assert set(snap) == {"cache", "queue"}
+    assert "failed_batches" in snap["queue"]
+    assert "in_flight" in snap["queue"]
+    assert {"hits", "misses", "bytes"} <= set(snap["cache"])
+    h = svc.healthz()
+    assert h["active_requests"] == 0
+    assert h["queue"]["failed_pairs"] == 0
+    svc.drain()
+
+
+def _post(port, path, obj, timeout=60):
+    req = urllib.request.Request(
+        f"http://127.0.0.1:{port}{path}",
+        data=json.dumps(obj).encode(),
+        headers={"Content-Type": "application/json"})
+    try:
+        with urllib.request.urlopen(req, timeout=timeout) as r:
+            return r.status, json.loads(r.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read())
+
+
+def test_metrics_and_statusz_endpoints():
+    svc = MSAService(ServiceConfig(max_wait_ms=1.0))
+    httpd = serve_http(svc, "127.0.0.1", 0)
+    port = httpd.server_address[1]
+    threading.Thread(target=httpd.serve_forever, daemon=True).start()
+    try:
+        st, resp = _post(port, "/align",
+                         {"sequences": ["ACGTACGTAA", "ACGTACGAAA"]})
+        assert st == 200
+        assert len(resp["trace_id"]) == 16      # every response carries one
+        text = urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/metrics", timeout=30).read().decode()
+        fams = parse_exposition(text)           # must parse cleanly
+        for required in ("repro_requests_started_total",
+                         "repro_request_seconds",
+                         "repro_align_calls_total",
+                         "repro_span_seconds"):
+            assert required in fams, required
+        statusz = urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/statusz", timeout=30).read().decode()
+        assert "active_requests" in statusz
+        assert "serve.align" in statusz         # recent root spans listed
+    finally:
+        httpd.shutdown()
+        httpd.server_close()
+        svc.drain()
+
+
+def test_http_drain_waits_for_inflight_then_rejects_with_503():
+    """ISSUE 8 satellite: drain with in-flight /tree and /search requests
+    completes them, post-drain requests get a clean 503, and the request
+    counters reconcile (started == finished + rejected)."""
+    svc = MSAService(ServiceConfig(max_wait_ms=1.0))
+    entered = {"tree": threading.Event(), "search": threading.Event()}
+    release = {"tree": threading.Event(), "search": threading.Event()}
+
+    def gated(kind, payload):
+        def impl(*a, **k):
+            entered[kind].set()
+            assert release[kind].wait(30)
+            return dict(payload)
+        return impl
+
+    svc._tree_impl = gated("tree", {"newick": "(a,b);"})
+    svc._search_impl = gated("search", {"queries": [], "stats": {}})
+
+    s0 = _total("repro_requests_started_total")
+    f0 = _total("repro_requests_finished_total")
+    r0 = _total("repro_requests_rejected_total")
+
+    httpd = serve_http(svc, "127.0.0.1", 0)
+    port = httpd.server_address[1]
+    threading.Thread(target=httpd.serve_forever, daemon=True).start()
+    results = {}
+
+    def client(key, path, obj):
+        results[key] = _post(port, path, obj)
+
+    threads = [
+        threading.Thread(target=client,
+                         args=("tree", "/tree",
+                               {"sequences": ["ACGT", "ACGA", "AGGT"]})),
+        threading.Thread(target=client,
+                         args=("search", "/search",
+                               {"sequences": ["ACGTACGT"]})),
+    ]
+    for t in threads:
+        t.start()
+    assert entered["tree"].wait(30) and entered["search"].wait(30)
+
+    drain_done = {}
+    drainer = threading.Thread(
+        target=lambda: drain_done.update(ok=svc.drain(timeout=60)))
+    drainer.start()
+    time.sleep(0.3)
+    assert drainer.is_alive(), "drain returned with requests in flight"
+    assert _total("repro_requests_active") == 2
+
+    client("late", "/align", {"sequences": ["ACGT", "ACGA"]})
+    assert results["late"][0] == 503
+    assert "draining" in results["late"][1]["error"]
+
+    for ev in release.values():
+        ev.set()
+    for t in threads:
+        t.join(30)
+    drainer.join(30)
+    assert drain_done.get("ok") is True
+    assert results["tree"][0] == 200
+    assert results["tree"][1]["newick"] == "(a,b);"
+    assert results["tree"][1]["trace_id"]
+    assert results["search"][0] == 200
+
+    httpd.shutdown()
+    httpd.server_close()
+
+    started = _total("repro_requests_started_total") - s0
+    finished = _total("repro_requests_finished_total") - f0
+    rejected = _total("repro_requests_rejected_total") - r0
+    assert started == 3 and finished == 2 and rejected == 1
+    assert started == finished + rejected
+    assert _total("repro_requests_active") == 0
