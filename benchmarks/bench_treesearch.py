@@ -1,0 +1,110 @@
+"""Multi-start tree search vs the single-start NJ+NNI refiner.
+
+Emits the ``bench/treesearch/*`` rows behind ``BENCH_treesearch.json``:
+
+* ``single_nj_nni_nN``  — the baseline: one NJ start, NNI-only hill
+  climb (``TreeEngine refine="ml"``), its final logL in ``derived``
+* ``fleet_kK_nN``       — the K-start NNI+SPR fleet
+  (``refine="search"``), best logL + per-start finals + move counts
+* ``trajectory_rR``     — best-logL-so-far vs cumulative wall clock,
+  one row per search round (``us_per_call`` is the cumulative wall
+  time, ``derived`` the best logL over all starts up to that round)
+
+The smoke run GATES the paper-facing invariant in-harness: on the
+Φ_DNA analogue the multi-start best logL must be >= the single-start
+NJ+NNI logL (both under the same model and per-fit budget) — the whole
+point of paying for K searches.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from .common import emit, time_host
+
+
+def treesearch_matrix(smoke: bool = False):
+    """Returns (single_logl, fleet_logl) for the in-harness gate."""
+    from repro.core.alphabet import DNA
+    from repro.core.msa import MSAConfig, center_star_msa
+    from repro.data import phi_dna
+    from repro.phylo import TreeEngine
+
+    fam = phi_dna()
+    msa = center_star_msa(fam.seqs, MSAConfig(method="kmer")).msa
+    n = msa.shape[0]
+    steps = 60 if smoke else 150
+    rounds = 3 if smoke else 8
+    starts = 4
+    radius = 2 if smoke else 3
+    common = dict(gap_code=DNA.gap_code, n_chars=DNA.n_chars,
+                  model="jc69", ml_steps=steps)
+
+    single_eng = TreeEngine(refine="ml", nni_rounds=rounds, **common)
+    us, single = time_host(single_eng.build, msa)
+    emit(f"bench/treesearch/single_nj_nni_n{n}", us,
+         f"logl={single.logl['final']:.2f};n_nni={single.n_nni};"
+         f"steps={steps};rounds={rounds}")
+
+    fleet_eng = TreeEngine(refine="search", starts=starts,
+                           spr_radius=radius, search_rounds=rounds,
+                           **common)
+    us, fleet = time_host(fleet_eng.build, msa)
+    stats = fleet.search
+    finals = [f"{t[-1]:.2f}" for t in stats["trajectories"]]
+    emit(f"bench/treesearch/fleet_k{starts}_n{n}", us,
+         f"logl={fleet.logl['final']:.2f};best_start={stats['best_start']}"
+         f"({stats['start_labels'][stats['best_start']]});"
+         f"moves={fleet.n_nni};spr_radius={radius};"
+         f"per_start_logl={'/'.join(finals)}")
+
+    # best-logL-so-far vs cumulative wall clock, per round
+    traj = np.asarray(stats["trajectories"], np.float64)
+    secs = np.asarray(stats["round_seconds"], np.float64)
+    cum = 0.0
+    for r in range(traj.shape[1]):
+        cum += secs[r]
+        best = float(np.nanmax(traj[:, :r + 1]))
+        emit(f"bench/treesearch/trajectory_r{r}", cum * 1e6,
+             f"best_logl={best:.4f};n_active_starts="
+             f"{int(np.isfinite(traj[:, r]).sum())}")
+
+    return float(single.logl["final"]), float(fleet.logl["final"])
+
+
+def check_gate(single_logl: float, fleet_logl: float, tol: float = 1e-3):
+    """Multi-start best logL must not fall below the single-start NJ+NNI
+    result — returns a list of failure strings (empty = pass)."""
+    if fleet_logl < single_logl - tol:
+        return [f"fleet best logL {fleet_logl:.4f} < single-start NJ+NNI "
+                f"logL {single_logl:.4f} (tol {tol})"]
+    return []
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog="benchmarks.bench_treesearch")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CI-budget run (fewer rounds/adam steps)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write emitted rows + metrics snapshot to PATH")
+    args = ap.parse_args(argv)
+
+    from . import common
+    print("name,us_per_call,derived")
+    single_logl, fleet_logl = treesearch_matrix(smoke=args.smoke)
+    failures = check_gate(single_logl, fleet_logl)
+    if args.json:
+        from repro.obs import REGISTRY
+        with open(args.json, "w") as f:
+            json.dump({"rows": common.ROWS,
+                       "metrics": REGISTRY.snapshot()}, f, indent=1)
+        print(f"# wrote {len(common.ROWS)} rows to {args.json}")
+    if failures:
+        raise SystemExit("BENCH_treesearch gate failed:\n  " +
+                         "\n  ".join(failures))
+
+
+if __name__ == "__main__":
+    main()

@@ -56,18 +56,37 @@ class BackupShardPlan:
         """Hosts holding ``shard``; owners[0] is the primary."""
         return [(shard + j) % self.n_hosts for j in range(self.replication)]
 
-    def takeover(self, dead: int, shard: int) -> Optional[int]:
-        """First surviving owner of ``shard`` when ``dead`` fails."""
+    @staticmethod
+    def _dead_set(dead) -> frozenset:
+        """Accept a single host id or any iterable of them (cascades)."""
+        if isinstance(dead, int):
+            return frozenset((dead,))
+        return frozenset(int(h) for h in dead)
+
+    def takeover(self, dead, shard: int) -> Optional[int]:
+        """First surviving owner of ``shard`` when ``dead`` fails.
+
+        ``dead`` is one host id or an iterable of them (a cascading
+        failure where the backup owners may be dead too); ``None`` means
+        every replica of the shard is gone.
+        """
+        dead = self._dead_set(dead)
         for h in self.owners(shard):
-            if h != dead:
+            if h not in dead:
                 return h
         return None
 
-    def reassignment(self, dead: int) -> Dict[int, int]:
-        """shard -> takeover host, for every shard ``dead`` held a copy of."""
+    def reassignment(self, dead) -> Dict[int, int]:
+        """shard -> takeover host, for every shard the dead hosts held.
+
+        ``dead`` is one host id or an iterable (cascading failures);
+        shards whose every replica died are absent from the table — the
+        caller must re-ingest those, not look them up.
+        """
+        dead = self._dead_set(dead)
         out = {}
         for s in range(self.n_shards):
-            if dead in self.owners(s):
+            if dead & set(self.owners(s)):
                 t = self.takeover(dead, s)
                 if t is not None:
                     out[s] = t

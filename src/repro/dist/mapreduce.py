@@ -26,7 +26,9 @@ web service routes requests of >= ``dist_threshold`` sequences through
 ``msa_over_mesh`` and shard-maps ``/tree`` distance strips through
 ``distance_strip_over_mesh`` / ``nearest_anchor_over_mesh`` on the same
 mesh), ``repro.phylo.ml`` (ML bootstrap replicates fan out through
-``bootstrap_over_mesh``), and ``launch/dryrun`` (512-device
+``bootstrap_over_mesh``), ``repro.phylo.treesearch`` (the K-start
+NNI+SPR fleet scores its candidate block through
+``treesearch_over_mesh``), and ``launch/dryrun`` (512-device
 lower+compile sweeps).
 """
 from __future__ import annotations
@@ -240,6 +242,37 @@ def bootstrap_over_mesh(mesh: Mesh, *, gap_code: int, n_chars: int,
                       out_specs=(P(data_axis, None, None),
                                  P(data_axis, None, None)),
                       check_vma=False)
+    return jax.jit(fn)
+
+
+def treesearch_over_mesh(mesh: Mesh, *, model: str, site_chunk: int = 2048,
+                         data_axis: str = "data"):
+    """Tree-stage hook: shard K-start tree-search candidate scoring.
+
+    Returns jitted ``fn(patterns, weights, children_k, blen_k, order_k,
+    params_k) -> (K, C) logL``. The per-search candidate blocks
+    (``(K, C, 2N-1, 2)`` children/blen, ``(K, C, N-1)`` orders) and the
+    per-search model parameters shard over ``data_axis`` (pad K with
+    ``pad_rows`` first — all-zero padding rows score garbage trees that
+    ``unpad_rows`` drops); the compressed site patterns and weights are
+    replicated. Each device runs ``repro.phylo.treesearch.score_fleet``
+    for its searches — per-(search, candidate) math is independent of
+    the partitioning, so a fixed seed is bit-reproducible across mesh
+    shapes (the same invariant ``bootstrap_over_mesh`` holds).
+    """
+    from ..phylo import treesearch as ts_mod
+
+    def _score(patterns, weights, ch_k, bl_k, od_k, pr_k):
+        return ts_mod.score_fleet(patterns, weights, ch_k, bl_k, od_k, pr_k,
+                                  model=model, site_chunk=site_chunk)
+
+    fn = sh.shard_map(_score, mesh,
+                      in_specs=(P(), P(),
+                                P(data_axis, None, None, None),
+                                P(data_axis, None, None, None),
+                                P(data_axis, None, None),
+                                P(data_axis, None)),
+                      out_specs=P(data_axis, None), check_vma=False)
     return jax.jit(fn)
 
 

@@ -10,8 +10,9 @@ and it dispatches through the ``repro.phylo.TreeEngine``.
 
 Outputs ``tree.nwk`` (with per-edge bootstrap support labels when
 ``--bootstrap`` ran) and ``report.json`` (effective backend, timings, for
-tiled backends the tile accountant's memory stats, and for ``--refine
-ml`` the selected model, per-model BIC, and logL before/after).
+tiled backends the tile accountant's memory stats, for ``--refine ml`` /
+``search`` the selected model, per-model BIC, and logL before/after, and
+for ``search`` the per-start trajectories and move counts).
 
 Flags:
   --fasta               aligned FASTA, equal-width rows (required)
@@ -24,15 +25,25 @@ Flags:
   --target-cluster      desired leaves per HPTree cluster
   --seed                sketch-sampling + bootstrap seed
   --tree-ll             also score the tree by JC69 log-likelihood
-  --refine              none | ml: maximum-likelihood refinement of the
-                        backend's tree (autodiff branch lengths +
-                        vmapped NNI; DNA/RNA only)
-  --model               substitution model for --refine ml
+  --refine              none | ml | search: ml = single-start ML
+                        refinement (autodiff branch lengths + vmapped
+                        NNI), search = the multi-start NNI+SPR fleet
+                        (repro.phylo.treesearch); DNA/RNA only
+  --model               substitution model for --refine ml/search
                         (auto = select by BIC)
   --bootstrap           nonparametric bootstrap replicates for per-edge
                         support (0 = off; shards over --mesh)
   --ml-steps            adam steps per ML fit
-  --nni-rounds          max accepted NNI rounds
+  --nni-rounds          max accepted NNI rounds (--refine ml)
+  --starts              fleet size K for --refine search
+  --spr-radius          SPR regraft radius for --refine search
+  --search-rounds       max move rounds for --refine search
+  --restartable         checkpoint the search fleet per round
+                        (to --ckpt-dir, default <out>/search_ckpt)
+  --ckpt-dir            search checkpoint directory (implies
+                        --restartable)
+  --resume              resume a killed --restartable search from its
+                        newest checkpoint
   --dist / --mesh       shard-map distance strips (and bootstrap
                         replicates) over a DxM mesh
   --trace-out           write the run's span tree as Chrome-trace JSON
@@ -71,21 +82,44 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--tree-ll", action="store_true",
                     help="also score the tree by JC69 log-likelihood "
                          "(DNA/RNA only)")
-    ap.add_argument("--refine", default="none", choices=["none", "ml"],
-                    help="maximum-likelihood refinement of the backend's "
-                         "tree (repro.phylo.ml; DNA/RNA only)")
+    ap.add_argument("--refine", default="none",
+                    choices=["none", "ml", "search"],
+                    help="ml = single-start ML refinement "
+                         "(repro.phylo.ml), search = the multi-start "
+                         "NNI+SPR fleet (repro.phylo.treesearch); "
+                         "DNA/RNA only")
     ap.add_argument("--model", default="auto",
                     choices=["auto", "jc69", "k80", "hky85", "gtr"],
-                    help="substitution model for --refine ml "
+                    help="substitution model for --refine ml/search "
                          "(auto = select by BIC)")
     ap.add_argument("--bootstrap", type=int, default=0,
                     help="bootstrap replicates for per-edge support "
-                         "labels (0 = off; requires --refine ml; shards "
-                         "over --mesh)")
+                         "labels (0 = off; requires --refine ml or "
+                         "search; shards over --mesh)")
     ap.add_argument("--ml-steps", type=int, default=150,
                     help="adam steps per ML branch-length/model fit")
     ap.add_argument("--nni-rounds", type=int, default=8,
                     help="max accepted NNI rounds for --refine ml")
+    ap.add_argument("--starts", type=int, default=4,
+                    help="fleet size K for --refine search (start "
+                         "topologies: NJ, cluster-medoid, random "
+                         "stepwise addition)")
+    ap.add_argument("--spr-radius", type=int, default=3,
+                    help="SPR regraft radius (hops from the prune wound) "
+                         "for --refine search")
+    ap.add_argument("--search-rounds", type=int, default=12,
+                    help="max move rounds per search for --refine search")
+    ap.add_argument("--restartable", action="store_true",
+                    help="checkpoint the search fleet per round through "
+                         "dist.checkpoint (to --ckpt-dir, default "
+                         "<out>/search_ckpt); a killed run resumes "
+                         "bit-identically with --resume")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="search checkpoint directory (implies "
+                         "--restartable)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume a killed --restartable search from its "
+                         "newest checkpoint")
     ap.add_argument("--dist", action="store_true",
                     help="shard-map the distance strips over the mesh")
     ap.add_argument("--mesh", default=None,
@@ -102,11 +136,15 @@ def build_parser() -> argparse.ArgumentParser:
 def main(argv=None):
     parser = build_parser()
     args = parser.parse_args(argv)
-    if args.bootstrap > 0 and args.refine != "ml":
-        parser.error("--bootstrap requires --refine ml")
-    if args.refine == "ml" and args.alphabet == "protein":
-        parser.error("--refine ml needs a nucleotide alphabet (the "
-                     "4-state likelihood)")
+    if args.bootstrap > 0 and args.refine == "none":
+        parser.error("--bootstrap requires --refine ml or search")
+    if args.refine != "none" and args.alphabet == "protein":
+        parser.error(f"--refine {args.refine} needs a nucleotide alphabet "
+                     "(the 4-state likelihood)")
+    if args.resume and not (args.restartable or args.ckpt_dir):
+        parser.error("--resume requires --restartable (or --ckpt-dir)")
+    if (args.restartable or args.ckpt_dir) and args.refine != "search":
+        parser.error("--restartable/--ckpt-dir apply to --refine search")
     from ..obs import export as obs_export
     from ..obs import trace as _trace
     with _trace.request_trace(), _trace.span("tree_run", fasta=args.fasta):
@@ -135,6 +173,9 @@ def _run(args):
         from .mesh import mesh_from_arg
         mesh = mesh_from_arg(args.mesh)
 
+    ckpt_dir = args.ckpt_dir
+    if args.restartable and ckpt_dir is None:
+        ckpt_dir = str(Path(args.out) / "search_ckpt")
     engine = TreeEngine(gap_code=alpha.gap_code, n_chars=alpha.n_chars,
                         correct=args.alphabet != "protein",
                         backend=args.backend,
@@ -144,7 +185,10 @@ def _run(args):
                         seed=args.seed, mesh=mesh,
                         refine=args.refine, model=args.model,
                         bootstrap=args.bootstrap, ml_steps=args.ml_steps,
-                        nni_rounds=args.nni_rounds)
+                        nni_rounds=args.nni_rounds, starts=args.starts,
+                        spr_radius=args.spr_radius,
+                        search_rounds=args.search_rounds,
+                        ckpt_dir=ckpt_dir, resume=args.resume)
     result = engine.build(msa)
 
     out = Path(args.out)
@@ -162,6 +206,11 @@ def _run(args):
         report["bic"] = result.bic
         report["n_nni"] = result.n_nni
         report["refine_seconds"] = result.timings.get("refine_seconds")
+        if result.search is not None:
+            report["search"] = dict(result.search,
+                                    starts=args.starts,
+                                    spr_radius=args.spr_radius,
+                                    ckpt_dir=ckpt_dir)
     if args.bootstrap > 0 and result.support is not None:
         finite = result.support[np.isfinite(result.support)]
         report["bootstrap"] = {

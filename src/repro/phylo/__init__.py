@@ -6,9 +6,11 @@ tiled distance-matrix engine with streaming block-reductions), ``pipeline``
 even (0.1 N, 0.1 N) — matrix), ``engine`` (the backend-dispatching
 ``TreeEngine``: dense | tiled | cluster, ``auto`` resolved by N and mesh),
 ``models`` (the JC69/K80/HKY85/GTR substitution-model registry with
-eigendecomposed transition probabilities), and ``ml`` (the MLRefiner:
+eigendecomposed transition probabilities), ``ml`` (the MLRefiner:
 autodiff branch lengths, vmapped NNI topology search, mesh-sharded
-nonparametric bootstrap — ``TreeEngine(refine="ml")``).
+nonparametric bootstrap — ``TreeEngine(refine="ml")``), and
+``treesearch`` (the restartable multi-start NNI+SPR fleet —
+``TreeEngine(refine="search")``).
 """
 from .engine import (AUTO_TILED_N, PhyloResult, REFINE_MODES,  # noqa: F401
                      TREE_BACKENDS, TreeEngine, resolve_tree_backend)
@@ -16,3 +18,5 @@ from .ml import MLRefiner, MLResult  # noqa: F401
 from .models import MODELS  # noqa: F401
 from .pipeline import tiled_phylogeny  # noqa: F401
 from .tiles import TileAccountant, TileContext  # noqa: F401
+from .treesearch import (TreeSearcher, TreeSearchResult,  # noqa: F401
+                         fleet_starts, spr_candidates)

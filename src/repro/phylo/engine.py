@@ -17,12 +17,16 @@ Backends (``TREE_BACKENDS``):
   auto      dense below ``cluster_threshold``; tiled on a multi-device
             mesh or ultra-large N; cluster otherwise
 
-Any backend's tree can then be **refined** (``refine="ml"``): the
-``repro.phylo.ml`` MLRefiner optimizes branch lengths by autodiff,
-selects a substitution model by BIC (``model="auto"``), hill-climbs the
-topology with vmapped NNI, and (``bootstrap=B``) attaches nonparametric
-bootstrap support to every internal edge — replicates shard over the
-engine's mesh.
+Any backend's tree can then be **refined**: ``refine="ml"`` runs the
+``repro.phylo.ml`` MLRefiner — branch lengths by autodiff, substitution
+model by BIC (``model="auto"``), topology by vmapped NNI hill-climb;
+``refine="search"`` runs the ``repro.phylo.treesearch`` multi-start
+fleet instead — ``starts`` searches (NJ, cluster-medoid, random
+stepwise addition) each interleaving NNI with bounded-radius SPR
+(``spr_radius``), restartable through ``ckpt_dir``/``resume``. Either
+mode plus ``bootstrap=B`` attaches nonparametric bootstrap support to
+every internal edge — replicates (and the search fleet's candidate
+scoring) shard over the engine's mesh.
 
 ``build`` returns a uniform ``PhyloResult`` (tree arrays, the effective
 backend that ran, timings, the tile accountant's memory stats, and — for
@@ -50,7 +54,7 @@ _M_BUILDS = _obs.counter("repro_tree_builds_total",
                          ("backend",))
 
 TREE_BACKENDS = ("auto", "dense", "tiled", "cluster")
-REFINE_MODES = ("none", "ml")
+REFINE_MODES = ("none", "ml", "search")
 
 # above this N, `auto` prefers the tiled pipeline even on one device: the
 # dense cluster path's (0.1 N)^2 sample matrix starts to dominate memory
@@ -70,7 +74,8 @@ class PhyloResult(NamedTuple):
     model: Optional[str] = None               # fitted substitution model
     support: Optional[np.ndarray] = None      # per-node bootstrap support
     bic: Optional[Dict[str, float]] = None    # per-candidate-model BIC
-    n_nni: Optional[int] = None               # accepted interchanges
+    n_nni: Optional[int] = None               # accepted topology moves
+    search: Optional[dict] = None             # fleet stats (refine=search)
 
     def newick(self, names=None) -> str:
         return treeio.to_newick(self.children, self.blen, self.root, names,
@@ -121,11 +126,16 @@ class TreeEngine:
     seed: int = 0
     mesh: Optional[object] = None
     use_kernel: Optional[bool] = None
-    refine: str = "none"             # none | ml (repro.phylo.ml)
+    refine: str = "none"             # none | ml | search (repro.phylo)
     model: str = "auto"              # substitution model (auto = BIC)
-    bootstrap: int = 0               # bootstrap replicates (ml only)
+    bootstrap: int = 0               # bootstrap replicates (ml/search)
     ml_steps: int = 150              # adam steps per ML fit
     nni_rounds: int = 8              # max accepted NNI rounds
+    starts: int = 4                  # refine=search: fleet size K
+    spr_radius: int = 3              # refine=search: SPR regraft radius
+    search_rounds: int = 12          # refine=search: max move rounds
+    ckpt_dir: Optional[str] = None   # refine=search: per-round checkpoints
+    resume: bool = False             # refine=search: resume from ckpt_dir
 
     def cluster_cfg(self) -> cluster_mod.ClusterConfig:
         return cluster_mod.ClusterConfig(sample_frac=self.sample_frac,
@@ -165,14 +175,14 @@ class TreeEngine:
         if self.refine not in REFINE_MODES:
             raise ValueError(f"unknown refine mode {self.refine!r}; "
                              f"expected one of {REFINE_MODES}")
-        if self.refine == "ml" and self.n_chars > 5:
-            raise ValueError("refine='ml' needs a nucleotide alphabet "
-                             "(4-state likelihood); got n_chars="
+        if self.refine != "none" and self.n_chars > 5:
+            raise ValueError(f"refine={self.refine!r} needs a nucleotide "
+                             "alphabet (4-state likelihood); got n_chars="
                              f"{self.n_chars}")
-        if self.bootstrap > 0 and self.refine != "ml":
-            raise ValueError("bootstrap support requires refine='ml' "
-                             f"(got bootstrap={self.bootstrap} with "
-                             f"refine={self.refine!r})")
+        if self.bootstrap > 0 and self.refine == "none":
+            raise ValueError("bootstrap support requires refine='ml' or "
+                             f"'search' (got bootstrap={self.bootstrap} "
+                             f"with refine={self.refine!r})")
         if cache is not None and cache_key is not None and cache_key in cache:
             return cache[cache_key]
         msa_np = np.asarray(msa)
@@ -218,8 +228,8 @@ class TreeEngine:
                 tile_stats = dict(acct.stats(),
                                   row_block_bytes=self.row_block * n * 4)
 
-            logl = model = support = bic = n_nni = None
-            if self.refine == "ml":
+            logl = model = support = bic = n_nni = search_stats = None
+            if self.refine in ("ml", "search"):
                 from ..core import likelihood as lik
                 from .ml import MLRefiner
                 refiner = MLRefiner(gap_code=self.gap_code,
@@ -228,17 +238,51 @@ class TreeEngine:
                                     model=self.model, steps=self.ml_steps,
                                     nni_rounds=self.nni_rounds,
                                     seed=self.seed, mesh=self.mesh)
-                # compress once; refine and bootstrap share the patterns
+                # compress once; refine/search and bootstrap share patterns
                 patterns, weights = lik.compress_patterns(msa_np)
                 t1 = time.perf_counter()
-                with _trace.span("tree.refine", model=self.model) as sp_ref:
-                    mlres = refiner.refine(msa_np, children, blen, root,
-                                           patterns=patterns, weights=weights)
-                children, blen, root = mlres.children, mlres.blen, mlres.root
-                logl = {"initial": mlres.logl_init, "final": mlres.logl_final}
-                model = mlres.model
-                bic = mlres.bic
-                n_nni = mlres.n_nni
+                if self.refine == "ml":
+                    with _trace.span("tree.refine",
+                                     model=self.model) as sp_ref:
+                        mlres = refiner.refine(msa_np, children, blen, root,
+                                               patterns=patterns,
+                                               weights=weights)
+                    children, blen, root = (mlres.children, mlres.blen,
+                                            mlres.root)
+                    logl = {"initial": mlres.logl_init,
+                            "final": mlres.logl_final}
+                    model = mlres.model
+                    bic = mlres.bic
+                    n_nni = mlres.n_nni
+                else:
+                    # the multi-start fleet builds its own starting trees
+                    # (NJ among them) — the backend tree above stays the
+                    # distance-stage product the spans account for
+                    from .treesearch import TreeSearcher
+                    searcher = TreeSearcher(
+                        gap_code=self.gap_code, n_chars=self.n_chars,
+                        correct=self.correct, starts=self.starts,
+                        spr_radius=self.spr_radius,
+                        rounds=self.search_rounds, model=self.model,
+                        steps=self.ml_steps, seed=self.seed, mesh=self.mesh,
+                        ckpt_dir=self.ckpt_dir, resume=self.resume)
+                    with _trace.span("tree.refine", model=self.model,
+                                     mode="search") as sp_ref:
+                        ts = searcher.search(msa_np, patterns=patterns,
+                                             weights=weights)
+                    children, blen, root = ts.children, ts.blen, ts.root
+                    logl = {"initial": ts.logl_init, "final": ts.logl_final}
+                    model = ts.model
+                    bic = ts.bic
+                    n_nni = int(ts.n_moves.sum())
+                    search_stats = {
+                        "best_start": ts.best_start,
+                        "start_labels": list(ts.start_labels),
+                        "trajectories": np.asarray(ts.trajectories).tolist(),
+                        "n_moves": np.asarray(ts.n_moves).tolist(),
+                        "round_seconds":
+                            np.asarray(ts.round_seconds).tolist(),
+                    }
                 timings["refine_seconds"] = (
                     sp_ref.duration if sp_ref is not None
                     else time.perf_counter() - t1)
@@ -253,14 +297,15 @@ class TreeEngine:
                     timings["bootstrap_seconds"] = (
                         sp_bs.duration if sp_bs is not None
                         else time.perf_counter() - t1)
-                eff = f"{eff}+ml"
+                eff = f"{eff}+{self.refine}"
         timings["total_seconds"] = (sp_total.duration if sp_total is not None
                                     else time.perf_counter() - t0)
         _M_BUILDS.labels(backend=eff).inc()
 
         result = PhyloResult(np.asarray(children), np.asarray(blen),
                              int(root), n, eff, self.backend, timings,
-                             tile_stats, logl, model, support, bic, n_nni)
+                             tile_stats, logl, model, support, bic, n_nni,
+                             search_stats)
         if cache is not None and cache_key is not None:
             cache[cache_key] = result
         return result

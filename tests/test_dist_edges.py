@@ -1,6 +1,8 @@
 """Edge cases for the distribution runtime: checkpoint retention/restore
-(empty dir, corrupt latest step, structure mismatch) and the mapreduce
-padding path when the shard count does not divide the sequence count."""
+(empty dir, corrupt latest step, structure mismatch), fault-plan
+takeover/reassignment under cascading failures, ResilientLoop retry
+exhaustion, and the mapreduce padding path when the shard count does not
+divide the sequence count."""
 import json
 import subprocess
 import sys
@@ -15,6 +17,7 @@ from repro.core import alphabet as ab
 from repro.core import kmer_index
 from repro.dist import mapreduce, sharding as sh
 from repro.dist.checkpoint import CheckpointManager
+from repro.dist.fault import BackupShardPlan, ResilientLoop, StepFailure
 from repro.launch.mesh import make_local_mesh
 
 
@@ -65,6 +68,77 @@ def test_retention_keep_one(tmp_path):
     assert cm.all_steps() == [3]
     _, step = cm.restore({"w": jnp.zeros(2)})
     assert step == 3
+
+
+# ----------------------------------------------------------- fault plans
+
+def test_takeover_when_backup_owner_also_dead():
+    plan = BackupShardPlan(n_hosts=4, replication=3)
+    assert plan.owners(0) == [0, 1, 2]
+    assert plan.takeover(0, 0) == 1             # single failure (int form)
+    assert plan.takeover({0, 1}, 0) == 2        # backup owner dead too
+    assert plan.takeover([1, 0], 0) == 2        # any iterable, any order
+    assert plan.takeover({0, 1, 2}, 0) is None  # every replica gone
+    # an unaffected shard still answers with its primary
+    assert plan.takeover({0, 1, 2}, 3) == 3
+
+
+def test_reassignment_after_cascading_failures():
+    plan = BackupShardPlan(n_hosts=4, replication=2)
+    out = plan.reassignment({0, 1})
+    # shard 0's owners (0, 1) are both dead: it must be ABSENT, not
+    # silently mapped to a dead host
+    assert 0 not in out
+    assert out == {1: 2, 3: 3}
+    for s, h in out.items():
+        assert h not in {0, 1}
+        assert h in plan.owners(s)
+    # the cascade is strictly worse than either single failure
+    assert set(out) < set(plan.reassignment(0)) | set(plan.reassignment(1))
+
+
+def test_reassignment_replication_one_drops_dead_shard():
+    plan = BackupShardPlan(n_hosts=3, replication=1)
+    assert plan.reassignment(1) == {}           # no replica to take over
+    assert plan.reassignment({0, 1, 2}) == {}
+
+
+def test_resilient_loop_retry_exhaustion(tmp_path):
+    """A fault that persists across replays must surface after
+    max_failures replays instead of looping forever."""
+    class Batches:
+        n_steps = 3
+
+        def __call__(self, step):
+            return step
+
+    def always_fail(step):
+        if step == 1:
+            raise StepFailure("persistent fault")
+
+    loop = ResilientLoop(lambda s, b: s + 1, CheckpointManager(tmp_path),
+                         ckpt_every=1, failure_hook=always_fail,
+                         max_failures=2)
+    with pytest.raises(StepFailure, match="persistent fault"):
+        loop.run(jnp.int32(0), Batches())
+
+
+def test_resilient_loop_failure_without_checkpoint_raises(tmp_path):
+    """ckpt_every=0 never saved — a StepFailure has nothing to replay
+    from and must propagate immediately."""
+    class Batches:
+        n_steps = 2
+
+        def __call__(self, step):
+            return step
+
+    def fail_first(step):
+        raise StepFailure("no checkpoint to fall back to")
+
+    loop = ResilientLoop(lambda s, b: s + 1, CheckpointManager(tmp_path),
+                         ckpt_every=0, failure_hook=fail_first)
+    with pytest.raises(StepFailure):
+        loop.run(jnp.int32(0), Batches())
 
 
 # ------------------------------------------------- mapreduce shard padding

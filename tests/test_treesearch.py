@@ -1,0 +1,240 @@
+"""Multi-start NNI+SPR tree search: fleet behavior, restartability
+(StepFailure replay and kill-and-resume must be bit-identical to the
+uninterrupted run), host==mesh determinism, and the engine/CLI wiring."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import treeio
+from repro.core.alphabet import DNA
+from repro.core.msa import MSAConfig, center_star_msa
+from repro.data import SimConfig, phi_dna, simulate_family
+from repro.dist.fault import StepFailure
+from repro.phylo import TreeEngine
+from repro.phylo.treesearch import TreeSearcher
+
+BASE = dict(gap_code=DNA.gap_code, starts=3, spr_radius=2, rounds=3,
+            model="jc69", steps=40, seed=0)
+
+
+@pytest.fixture(scope="module")
+def msa8():
+    fam = simulate_family(SimConfig(n_leaves=8, root_len=120, seed=1))
+    return center_star_msa(fam.seqs, MSAConfig(method="kmer")).msa
+
+
+def _newick(res):
+    return treeio.to_newick(res.children, res.blen, res.root)
+
+
+def _same(a, b):
+    assert _newick(a) == _newick(b)
+    assert a.logl_final == b.logl_final
+    assert np.array_equal(a.trajectories, b.trajectories, equal_nan=True)
+
+
+# ------------------------------------------------------------------- fleet
+
+def test_fleet_improves_and_trajectories_monotone(msa8):
+    res = TreeSearcher(**BASE).search(msa8)
+    assert res.start_labels == ("nj", "cluster", "random2")
+    assert res.logl_final >= res.logl_init
+    assert res.best_start == int(np.argmax(res.trajectories[:, -1]))
+    # per-start logL never decreases across rounds (moves are accepted
+    # only when strictly improving; a deactivated search stays flat)
+    traj = res.trajectories
+    assert np.isfinite(traj).all()
+    assert (np.diff(traj, axis=1) >= -1e-4).all()
+    # the random start must have climbed via accepted moves
+    assert res.n_moves.sum() > 0
+
+
+def test_random_start_diversity(msa8):
+    """Distinct seeds give distinct random-addition topologies."""
+    from repro.phylo.treesearch import random_addition_tree
+    t0 = random_addition_tree(8, np.random.default_rng((0, 2)))
+    t1 = random_addition_tree(8, np.random.default_rng((1, 2)))
+    b0 = treeio.bipartitions(t0[0], t0[2], 8)
+    b1 = treeio.bipartitions(t1[0], t1[2], 8)
+    assert b0 != b1
+
+
+# ----------------------------------------------------------- restartability
+
+def test_step_failure_replay_bit_identical(msa8, tmp_path):
+    """Inject StepFailure at a randomized round; the replayed run must
+    produce bit-identical Newick bytes, logL, and trajectories."""
+    clean = TreeSearcher(ckpt_dir=str(tmp_path / "clean"),
+                         **BASE).search(msa8)
+    fail_at = int(np.random.default_rng(42).integers(1, BASE["rounds"] + 1))
+
+    class Once:
+        fired = False
+
+        def __call__(self, step):
+            if step == fail_at and not self.fired:
+                self.fired = True
+                raise StepFailure(f"injected at round {step}")
+
+    faulty = TreeSearcher(ckpt_dir=str(tmp_path / "faulty"),
+                          failure_hook=Once(), **BASE).search(msa8)
+    _same(clean, faulty)
+    assert _newick(clean).encode() == _newick(faulty).encode()
+
+
+def test_kill_and_resume_bit_identical(msa8, tmp_path):
+    """A non-StepFailure kill escapes the loop; resume=True continues
+    from the newest checkpoint to the same final tree, bit for bit."""
+    clean = TreeSearcher(ckpt_dir=str(tmp_path / "clean"),
+                         **BASE).search(msa8)
+
+    def kill(step):
+        if step == 2:
+            raise RuntimeError("killed")
+
+    with pytest.raises(RuntimeError, match="killed"):
+        TreeSearcher(ckpt_dir=str(tmp_path / "killed"),
+                     failure_hook=kill, **BASE).search(msa8)
+    resumed = TreeSearcher(ckpt_dir=str(tmp_path / "killed"),
+                           resume=True, **BASE).search(msa8)
+    _same(clean, resumed)
+    assert _newick(clean).encode() == _newick(resumed).encode()
+
+
+def test_inline_loop_matches_checkpointed(msa8, tmp_path):
+    """ckpt_dir=None takes the plain loop — same deterministic result."""
+    _same(TreeSearcher(**BASE).search(msa8),
+          TreeSearcher(ckpt_dir=str(tmp_path), **BASE).search(msa8))
+
+
+# ------------------------------------------------------- host == mesh
+
+MESH_SCRIPT = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import sys
+sys.path.insert(0, %r)
+import json
+import numpy as np
+from repro.core import treeio
+from repro.core.msa import MSAConfig, center_star_msa
+from repro.data import SimConfig, simulate_family
+from repro.launch.mesh import make_local_mesh
+from repro.phylo.treesearch import TreeSearcher
+
+fam = simulate_family(SimConfig(n_leaves=8, root_len=120, seed=1))
+msa = center_star_msa(fam.seqs, MSAConfig(method="kmer")).msa
+base = dict(gap_code=4, starts=3, spr_radius=2, rounds=2, model="jc69",
+            steps=30, seed=0)
+host = TreeSearcher(**base).search(msa)
+mesh = make_local_mesh((2, 1), ("data", "model"))
+dist = TreeSearcher(mesh=mesh, **base).search(msa)
+print("RESULT " + json.dumps({
+    "same_newick": treeio.to_newick(host.children, host.blen, host.root)
+        == treeio.to_newick(dist.children, dist.blen, dist.root),
+    "same_logl": bool(host.logl_final == dist.logl_final),
+    "same_traj": bool(np.array_equal(host.trajectories, dist.trajectories,
+                                     equal_nan=True)),
+    "moved": int(host.n_moves.sum())}))
+'''
+
+
+def test_search_host_vs_mesh_bit_identical():
+    """Fixed seed, K=3 starts: host run and 2x1-mesh run must agree on
+    the best tree AND every per-start logL trajectory, bit for bit."""
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    proc = subprocess.run([sys.executable, "-c", MESH_SCRIPT % src],
+                          capture_output=True, text=True, timeout=560)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT ")][-1]
+    out = json.loads(line[len("RESULT "):])
+    assert out["same_newick"]
+    assert out["same_logl"]
+    assert out["same_traj"]
+    assert out["moved"] > 0        # the comparison exercised real moves
+
+
+# ----------------------------------------------------- engine + acceptance
+
+def test_engine_refine_search_dispatch(msa8):
+    eng = TreeEngine(gap_code=DNA.gap_code, n_chars=DNA.n_chars,
+                     refine="search", model="jc69", starts=3, spr_radius=2,
+                     search_rounds=2, ml_steps=30)
+    res = eng.build(msa8)
+    assert res.backend.endswith("+search")
+    assert res.logl["final"] >= res.logl["initial"]
+    assert res.search["start_labels"] == ["nj", "cluster", "random2"]
+    assert len(res.search["trajectories"]) == 3
+    assert res.n_nni == int(np.asarray(res.search["n_moves"]).sum())
+
+
+def test_engine_search_validation():
+    with pytest.raises(ValueError, match="nucleotide"):
+        TreeEngine(gap_code=20, n_chars=21, refine="search").build(
+            np.zeros((4, 10), np.int8))
+    with pytest.raises(ValueError, match="bootstrap"):
+        TreeEngine(gap_code=DNA.gap_code, n_chars=DNA.n_chars,
+                   refine="none", bootstrap=4).build(
+            np.zeros((4, 10), np.int8))
+
+
+def test_search_bootstrap_support(msa8):
+    eng = TreeEngine(gap_code=DNA.gap_code, n_chars=DNA.n_chars,
+                     refine="search", model="jc69", starts=2, spr_radius=1,
+                     search_rounds=1, ml_steps=30, bootstrap=8)
+    res = eng.build(msa8)
+    finite = res.support[np.isfinite(res.support)]
+    assert finite.size > 0
+    assert ((finite >= 0) & (finite <= 1)).all()
+
+
+def test_multistart_beats_single_start_nni_on_phi_dna():
+    """The ISSUE acceptance gate: K=4 starts with SPR reach a logL at
+    least as good as the single-start NJ+NNI refiner (same model, same
+    per-fit budget)."""
+    fam = phi_dna()
+    msa = center_star_msa(fam.seqs, MSAConfig(method="kmer")).msa
+    common = dict(gap_code=DNA.gap_code, n_chars=DNA.n_chars,
+                  model="jc69", ml_steps=60)
+    single = TreeEngine(refine="ml", nni_rounds=3, **common).build(msa)
+    fleet = TreeEngine(refine="search", starts=4, spr_radius=2,
+                       search_rounds=3, **common).build(msa)
+    assert fleet.logl["final"] >= single.logl["final"] - 1e-3
+    assert fleet.search["best_start"] is not None
+
+
+# ----------------------------------------------------------------- CLI
+
+def test_tree_run_search_cli(msa8, tmp_path):
+    from repro.launch import tree_run
+    fa = tmp_path / "aligned.fasta"
+    fa.write_text("".join(f">s{i}\n{DNA.decode(row)}\n"
+                          for i, row in enumerate(msa8)))
+    out = tmp_path / "out"
+    tree_run.main(["--fasta", str(fa), "--out", str(out),
+                   "--refine", "search", "--model", "jc69", "--starts", "3",
+                   "--spr-radius", "2", "--search-rounds", "2",
+                   "--ml-steps", "30", "--restartable"])
+    report = json.loads((out / "report.json").read_text())
+    assert report["refine"] == "search"
+    assert report["search"]["starts"] == 3
+    assert report["search"]["spr_radius"] == 2
+    assert len(report["search"]["trajectories"]) == 3
+    assert (out / "tree.nwk").read_text().strip().endswith(";")
+    assert Path(report["search"]["ckpt_dir"]).is_dir()
+
+
+def test_tree_run_search_flag_validation(tmp_path):
+    from repro.launch import tree_run
+    fa = tmp_path / "a.fasta"
+    fa.write_text(">a\nACGT\n>b\nACGT\n")
+    with pytest.raises(SystemExit):
+        tree_run.main(["--fasta", str(fa), "--resume"])
+    with pytest.raises(SystemExit):
+        tree_run.main(["--fasta", str(fa), "--refine", "ml",
+                       "--restartable"])

@@ -1,0 +1,177 @@
+"""Property tests for the tree-search move generators.
+
+Every SPR/NNI candidate must preserve the leaf set, remain a valid
+rooted binary tree with a topological processing order,
+``renumber_topological`` must be idempotent on its output, and the
+candidate count must match the closed-form bound (unbounded radius) and
+an independently implemented undirected-BFS oracle (bounded radius).
+
+Uses hypothesis when installed, the seeded fallback otherwise (same
+protocol as test_property.py).
+"""
+from collections import defaultdict, deque
+
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                    # pragma: no cover
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import treeio
+from repro.phylo.ml import nni_candidates, renumber_topological
+from repro.phylo.treesearch import (random_addition_tree, spr_candidates,
+                                    topological_order)
+
+
+def _tree(n, seed):
+    """A random index-topological tree with its processing order."""
+    ch, bl, rt = random_addition_tree(n, np.random.default_rng(seed))
+    return ch, bl, rt, np.arange(n, 2 * n - 1, dtype=np.int32)
+
+
+def _assert_valid(ch, od, n, root):
+    """Rooted binary + leaf-set + topological-order invariants."""
+    assert int(od[-1]) == root
+    assert len(od) == n - 1
+    seen = set(range(n))                       # leaves are always "done"
+    parents = defaultdict(int)
+    for node in od:
+        a, b = int(ch[node, 0]), int(ch[node, 1])
+        assert a >= 0 and b >= 0               # internal nodes are binary
+        assert a in seen and b in seen         # children before parents
+        parents[a] += 1
+        parents[b] += 1
+        seen.add(int(node))
+    # every node except the root has exactly one parent; the root none
+    for node in range(2 * n - 1):
+        assert parents[node] == (0 if node == root else 1)
+    assert treeio.leaf_sets(ch, root, n)[root] == frozenset(range(n))
+
+
+def _oracle_spr_count(children, root, n, radius):
+    """Independent SPR candidate counter: undirected edge-set BFS.
+
+    Deliberately re-derived from the move definition (not the generator's
+    parent-map BFS): for each prune node, build the pruned tree's edge
+    set explicitly, take multi-source BFS depths over an undirected
+    adjacency map, and count edges within radius — minus the merged edge.
+    """
+    children = np.asarray(children)
+    M = children.shape[0]
+    par = {}
+    for p in range(M):
+        if children[p, 0] >= 0:
+            par[int(children[p, 0])] = int(p)
+            par[int(children[p, 1])] = int(p)
+
+    def subtree(v):
+        out, stack = set(), [v]
+        while stack:
+            x = stack.pop()
+            out.add(x)
+            if children[x, 0] >= 0:
+                stack += [int(children[x, 0]), int(children[x, 1])]
+        return out
+
+    total = 0
+    for v in range(M):
+        if v == root or v not in par or par[v] == root:
+            continue
+        u = par[v]
+        g = par[u]
+        w = int(children[u, 1]) if int(children[u, 0]) == v \
+            else int(children[u, 0])
+        gone = subtree(v) | {u}
+        edges = {(int(p), int(c))
+                 for p in range(M) if children[p, 0] >= 0 and p not in gone
+                 for c in children[p] if int(c) not in gone}
+        edges.add((g, w))
+        adj = defaultdict(set)
+        for a, b in edges:
+            adj[a].add(b)
+            adj[b].add(a)
+        depth = {g: 0, w: 0}
+        dq = deque((g, w))
+        while dq:
+            x = dq.popleft()
+            for y in adj[x]:
+                if y not in depth:
+                    depth[y] = depth[x] + 1
+                    dq.append(y)
+        total += sum(1 for (a, b) in edges if (a, b) != (g, w)
+                     and 1 + min(depth[a], depth[b]) <= radius)
+    return total
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=4, max_value=10),
+       st.integers(min_value=0, max_value=10 ** 6),
+       st.integers(min_value=1, max_value=4))
+def test_spr_candidates_are_valid_trees(n, seed, radius):
+    ch, bl, rt, od = _tree(n, seed)
+    chs, bls, ods = spr_candidates(ch, bl, od, n, radius=radius)
+    assert chs.shape[0] > 0                    # radius>=1 always has targets
+    for i in range(chs.shape[0]):
+        _assert_valid(chs[i], ods[i], n, rt)
+        assert (bls[i][np.asarray(ods[i])] >= 0).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=4, max_value=10),
+       st.integers(min_value=0, max_value=10 ** 6))
+def test_nni_candidates_are_valid_trees(n, seed):
+    ch, bl, rt, od = _tree(n, seed)
+    chs, _, ods = nni_candidates(ch, bl, od, n)
+    assert chs.shape[0] == 2 * (n - 2)         # the NNI closed form
+    for i in range(chs.shape[0]):
+        _assert_valid(chs[i], ods[i], n, rt)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=4, max_value=9),
+       st.integers(min_value=0, max_value=10 ** 6),
+       st.integers(min_value=1, max_value=4))
+def test_spr_count_matches_independent_oracle(n, seed, radius):
+    ch, bl, rt, od = _tree(n, seed)
+    chs, _, _ = spr_candidates(ch, bl, od, n, radius=radius)
+    assert chs.shape[0] == _oracle_spr_count(ch, rt, n, radius)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=4, max_value=9),
+       st.integers(min_value=0, max_value=10 ** 6))
+def test_spr_unbounded_count_matches_closed_form(n, seed):
+    """radius >= diameter enumerates 2*(n - leaves(v)) - 3 targets per
+    valid prune node v (merged edge excluded)."""
+    ch, bl, rt, od = _tree(n, seed)
+    chs, _, _ = spr_candidates(ch, bl, od, n, radius=2 * n)
+    sets = treeio.leaf_sets(ch, rt, n)
+    par = {}
+    for p in od:
+        par[int(ch[p, 0])] = int(p)
+        par[int(ch[p, 1])] = int(p)
+    expect = sum(2 * (n - len(sets.get(v, {v}))) - 3
+                 for v in range(2 * n - 1)
+                 if v != rt and v in par and par[v] != rt)
+    assert chs.shape[0] == expect
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=4, max_value=8),
+       st.integers(min_value=0, max_value=10 ** 6))
+def test_renumber_topological_idempotent_on_candidates(n, seed):
+    """Renumbering a candidate once yields index-topological arrays; a
+    second renumber with the identity order must be a no-op."""
+    ch, bl, rt, od = _tree(n, seed)
+    chs, bls, ods = spr_candidates(ch, bl, od, n, radius=3)
+    idx = np.random.default_rng(seed).integers(chs.shape[0])
+    c1, b1, r1 = renumber_topological(chs[idx], bls[idx], rt, ods[idx], n)
+    assert r1 == 2 * n - 2
+    order1 = topological_order(c1, r1, n)
+    np.testing.assert_array_equal(order1,
+                                  np.arange(n, 2 * n - 1, dtype=np.int32))
+    c2, b2, r2 = renumber_topological(c1, b1, r1, order1, n)
+    np.testing.assert_array_equal(c1, c2)
+    np.testing.assert_array_equal(b1, b2)
+    assert r1 == r2
