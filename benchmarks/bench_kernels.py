@@ -19,7 +19,7 @@ shape the fused banded pairs kernel must move strictly fewer HBM bytes
 than the O(n·m) SW direction-matrix path.
 
 CLI: ``python -m benchmarks.bench_kernels [--json PATH] [--check]
-[--write-baseline]`` — ``run.py --json-kernels`` drives the same
+[--write-baseline]`` — ``run.py --json kernels`` drives the same
 functions for CI.
 """
 from __future__ import annotations

@@ -1,0 +1,120 @@
+"""Persistent MSA store benchmark: the ``BENCH_store`` artifact.
+
+Drives ``repro.serve.store.MSAStore`` through its three costed paths
+(ISSUE 10) and emits one row per path:
+
+  bench/store/ingest        continuous ``add`` throughput — one atomic
+                            generation commit per add (incremental merge
+                            + ``atomic_save_npz`` + retention GC)
+  bench/store/realign_swap  drift-triggered background realign latency:
+                            from the drifted add returning to the
+                            realigned generation swapping in
+  bench/store/restore       cold restart: newest-generation restore from
+                            disk (read + fingerprint verification)
+
+  PYTHONPATH=src python -m benchmarks.bench_store [--smoke] [--json PATH]
+
+The artifact is ``{"rows": [...], "metrics": <repro.obs snapshot>}`` —
+the store's own counters/histograms (``repro_store_*``) ride along, so
+commit/realign/restore latency distributions land in CI trajectories.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+from pathlib import Path
+
+from .common import emit
+
+
+def store_matrix(smoke: bool = False) -> None:
+    import numpy as np
+
+    from repro.core.msa import MSAConfig, center_star_msa
+    from repro.serve.store import MSAStore
+
+    rng = np.random.default_rng(0)
+    n_seed, seq_len, n_adds = (4, 64, 8) if smoke else (8, 128, 32)
+
+    def seq(L):
+        return "".join("ACGT"[c] for c in rng.integers(0, 4, L))
+
+    def mutate(s, k=3):
+        s = list(s)
+        for _ in range(k):
+            s[rng.integers(0, len(s))] = "ACGT"[rng.integers(0, 4)]
+        return "".join(s)
+
+    cfg = MSAConfig(method="plain")
+    base = seq(seq_len)
+    fam = [base] + [mutate(base) for _ in range(n_seed - 1)]
+    res = center_star_msa(fam, cfg)
+    root = Path(tempfile.mkdtemp(prefix="bench_store_")) / "store"
+
+    # ---- ingest: one committed generation per add, substitution-only
+    # members so width stays fixed and no realign fires mid-measurement
+    store = MSAStore(root, keep=4, drift_threshold=10.0)
+    store.create("bench", msa=res.msa, center_idx=res.center_idx,
+                 seqs=fam, names=[f"m{i}" for i in range(n_seed)])
+    adds = [mutate(base) for _ in range(n_adds)]
+    store.add("bench", ["warm"], [adds[0]], cfg)      # compile warm-up
+    t0 = time.perf_counter()
+    for i, s in enumerate(adds):
+        store.add("bench", [f"a{i}"], [s], cfg)
+    ingest_s = time.perf_counter() - t0
+    entry = store.get("bench")
+    emit("bench/store/ingest", ingest_s / n_adds * 1e6,
+         f"adds_per_s={n_adds / ingest_s:.1f};generation={entry.generation}"
+         f";width={entry.width}")
+
+    # ---- realign swap: an insert-heavy add crosses the drift threshold;
+    # measure drifted-add-return -> realigned-generation-swapped-in
+    store.drift_threshold = 0.2
+    big = base[:8] + seq(max(seq_len // 2, 24)) + base[8:]
+    t0 = time.perf_counter()
+    drifted, info = store.add("bench", ["big"], [big], cfg)
+    assert info["realign_pending"], "drift did not schedule a realign"
+    store.wait_realigns(timeout=600)
+    swap_s = time.perf_counter() - t0
+    swapped = store.get("bench")
+    assert swapped.generation == drifted.generation + 1
+    emit("bench/store/realign_swap", swap_s * 1e6,
+         f"members={len(swapped.names)};width={swapped.width}"
+         f";growth_at_trigger={info['growth']}")
+    store.close()
+
+    # ---- restore: cold restart over the committed directory
+    t0 = time.perf_counter()
+    cold = MSAStore(root, keep=4)
+    restored = cold.get("bench")
+    restore_s = time.perf_counter() - t0
+    assert restored.fingerprint == swapped.fingerprint, \
+        "restart did not restore the committed generation"
+    emit("bench/store/restore", restore_s * 1e6,
+         f"generation={restored.generation};bytes={restored.nbytes}")
+    cold.close()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog="benchmarks.bench_store")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small family / few adds (the CI smoke step)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the BENCH_store artifact to PATH")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    store_matrix(smoke=args.smoke)
+    if args.json:
+        from repro.obs import REGISTRY
+
+        from .common import ROWS
+        with open(args.json, "w") as f:
+            json.dump({"rows": ROWS, "metrics": REGISTRY.snapshot()}, f,
+                      indent=1)
+        print(f"# wrote BENCH_store artifact to {args.json}")
+
+
+if __name__ == "__main__":
+    main()

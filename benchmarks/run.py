@@ -26,10 +26,7 @@ against the recorded baseline
 gated metric fails the run).
 
 A PATH-looking ``--json`` value (contains ``/`` or ends in ``.json``)
-keeps the legacy behavior — every emitted row dumped to that path — and
-the legacy per-suite flags (``--json-tree``, ``--json-ml``,
-``--json-search``, ``--json-kernels``) remain as deprecated aliases
-that select the suite and override its output path.
+keeps the legacy behavior — every emitted row dumped to that path.
 
 The ``msa`` suite also runs the obs-overhead guardrail
 (``bench_msa.obs_overhead_row``): instrumentation must cost < 3% on the
@@ -88,33 +85,15 @@ def main() -> None:
                          "keeps the legacy dump-every-row behavior")
     ap.add_argument("--out-dir", default=".", metavar="DIR",
                     help="directory for BENCH_<name>.json artifacts")
-    ap.add_argument("--json-tree", default=None, metavar="PATH",
-                    help="deprecated alias: --json tree, written to PATH")
-    ap.add_argument("--json-ml", default=None, metavar="PATH",
-                    help="deprecated alias: --json ml, written to PATH")
-    ap.add_argument("--json-search", default=None, metavar="PATH",
-                    help="deprecated alias: --json search, written to PATH")
-    ap.add_argument("--json-kernels", default=None, metavar="PATH",
-                    help="deprecated alias: --json kernels, written to PATH")
     args = ap.parse_args()
 
     names, legacy_all = parse_json_selector(args.json)
-    overrides = {}
-    for name, flag in (("tree", args.json_tree), ("ml", args.json_ml),
-                       ("search", args.json_search),
-                       ("kernels", args.json_kernels)):
-        if flag:
-            print(f"# --json-{name} is deprecated; use --json {name} "
-                  f"[--out-dir DIR]")
-            if name not in names:
-                names.append(name)
-            overrides[name] = Path(flag)
     out_dir = Path(args.out_dir)
     if names:
         out_dir.mkdir(parents=True, exist_ok=True)
 
     def art_path(name: str) -> Path:
-        return overrides.get(name, out_dir / f"BENCH_{name}.json")
+        return out_dir / f"BENCH_{name}.json"
 
     from . import common
     print("name,us_per_call,derived")

@@ -36,19 +36,34 @@ _C_RESTORES = _obs.counter("repro_checkpoint_restores_total",
                            "successful checkpoint restores")
 
 
-def atomic_save_npz(path, arrays: dict):
+def atomic_save_npz(path, arrays: dict, *, _hook=None):
     """Crash-safe npz write: temp file in the target directory, then one
     ``os.replace``. The durability primitive ``CheckpointManager`` builds
     on, exported for single-artifact consumers (``repro.search`` persists
     its ``SearchIndex`` through it so a crash mid-save never corrupts an
-    index a fleet of workers is about to load)."""
+    index a fleet of workers is about to load; ``repro.serve.store``
+    commits MSA generations through it).
+
+    ``_hook(label)`` is a fault-injection seam for crash-atomicity tests:
+    it is called at ``save.serialize`` (nothing written yet),
+    ``save.pre-replace`` (temp complete, final untouched) and
+    ``save.post-replace`` (final replaced). A hook that raises models a
+    crash at that point; the temp file is always cleaned up, the final
+    file is either the old bytes or the new bytes, never a mix.
+    """
     path = Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
     tmp = path.parent / f".tmp-{uuid.uuid4().hex}"
     try:
+        if _hook is not None:
+            _hook("save.serialize")
         with open(tmp, "wb") as f:
             np.savez(f, **arrays)
+        if _hook is not None:
+            _hook("save.pre-replace")
         os.replace(tmp, path)
+        if _hook is not None:
+            _hook("save.post-replace")
     finally:
         tmp.unlink(missing_ok=True)
 

@@ -6,10 +6,14 @@
 Serves ``repro.serve.MSAService`` over stdlib HTTP/JSON:
 
   POST /align      {"fasta": ">a\\nACGT..."} or {"sequences": [...],
-                   "names": [...]} -> aligned rows + msa_id
+                   "names": [...]} -> aligned rows + msa_id; with
+                   ?name=... (or "name" in the body) and --store-dir:
+                   create/load a persistent named alignment
   POST /align/add  {"msa_id": ..., "fasta"/"sequences": ...} ->
-                   incremental insertion against the frozen center
-  POST /tree       {"msa_id": ...} or sequences -> Newick
+                   incremental insertion against the frozen center;
+                   {"name": ...} ingests into the store (one atomic
+                   generation per add, background realign past drift)
+  POST /tree       {"msa_id": ...}, {"name": ...} or sequences -> Newick
   POST /search     query sequences -> per-query top-k database hits
                    (needs --search-db / --search-index)
   GET  /healthz    liveness + cache / coalescing-queue stats
@@ -27,7 +31,12 @@ Flags:
   --max-wait-ms         coalescing: max time a request waits for company
   --cache-mb            result-cache byte budget (content-hash LRU)
   --drift-threshold     /align/add width growth past which a full realign
-                        replaces the incremental merge
+                        replaces the incremental merge (named alignments:
+                        cumulative growth scheduling a background realign)
+  --store-dir           persistent MSAStore root enabling named
+                        alignments that survive restarts
+  --store-keep          generation files retained per named alignment
+  --store-realign       background (realign + atomic swap) | never
   --tree-backend        repro.phylo registry default for /tree
   --tree-refine         none | ml default /tree refinement (requests can
                         override per call with {"refine": "ml"})
@@ -85,7 +94,18 @@ def build_parser() -> argparse.ArgumentParser:
                     help="result cache byte budget (MiB)")
     ap.add_argument("--drift-threshold", type=float, default=0.25,
                     help="align/add relative width growth forcing a full "
-                         "realign")
+                         "realign (for named alignments: the cumulative "
+                         "growth that schedules a background realign)")
+    ap.add_argument("--store-dir", default=None,
+                    help="persistent MSA store root: enables named "
+                         "alignments (/align?name=...) with atomic "
+                         "generation commits surviving restarts")
+    ap.add_argument("--store-keep", type=int, default=4,
+                    help="generation files retained per named alignment")
+    ap.add_argument("--store-realign", default="background",
+                    choices=["background", "never"],
+                    help="drift response for named alignments: realign on "
+                         "a worker thread and swap atomically, or never")
     ap.add_argument("--tree-backend", default="auto",
                     choices=["auto", "dense", "tiled", "cluster"],
                     help="default /tree backend (repro.phylo registry)")
@@ -169,6 +189,8 @@ def main(argv=None):
         max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
         cache_bytes=args.cache_mb << 20,
         drift_threshold=args.drift_threshold,
+        store_dir=args.store_dir, store_keep=args.store_keep,
+        store_realign=args.store_realign,
         tree_backend=args.tree_backend,
         tree_refine=args.tree_refine,
         tree_model=args.tree_model,
@@ -185,11 +207,17 @@ def main(argv=None):
         raise KeyboardInterrupt
 
     signal.signal(signal.SIGTERM, _shutdown)
+    store_note = ""
+    if service.store is not None:
+        restored = service.store.names()
+        store_note = (f" store={args.store_dir}"
+                      f"[{len(restored)} named alignment(s)]")
     print(f"serving MSA/phylogeny on http://{args.host}:{args.port} "
           f"(alphabet={args.alphabet} method={args.method} "
           f"backend={service.engine.backend}"
           f"{' mesh' if mesh is not None else ''}"
-          f"{f' search_db={search_index.n_seqs}' if search_index else ''})"
+          f"{f' search_db={search_index.n_seqs}' if search_index else ''}"
+          f"{store_note})"
           f" — Ctrl-C drains")
     try:
         httpd.serve_forever()

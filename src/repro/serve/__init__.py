@@ -12,6 +12,10 @@ reusing the engines instead of re-implementing them:
   ``incremental``  add-to-MSA against a frozen center + merged gap
                    pattern — bit-identical columns for already-aligned
                    members, full realign past a drift threshold
+  ``store``        persistent generation-versioned MSAStore of *named*
+                   alignments: atomic crash-safe commits, retention,
+                   corrupt-latest fallback, background drift realign
+                   with atomic swap (``--store-dir``)
   ``service``      the MSAService facade + stdlib HTTP/JSON front end
                    (``/align``, ``/align/add``, ``/tree``, ``/healthz``)
 
@@ -21,3 +25,5 @@ from .cache import ResultCache, canonical_key, canonicalize  # noqa: F401
 from .incremental import AddResult, add_to_msa  # noqa: F401
 from .queue import AlignJob, CoalescingAligner  # noqa: F401
 from .service import MSAService, ServiceConfig, serve_http  # noqa: F401
+from .store import (MSAStore, StoreEntry, StoreError,  # noqa: F401
+                    content_fingerprint)

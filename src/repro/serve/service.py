@@ -6,9 +6,18 @@ The request dataflow (docs/ARCHITECTURE.md has the full map):
                    center-select and submit the map(1) work to the
                    coalescing queue (one ``align_pairs`` batch serves
                    many concurrent requests) -> center-star assembly ->
-                   cache fill -> rows mapped back to the caller's order
+                   cache fill -> rows mapped back to the caller's order.
+                   With ``?name=`` (or ``"name"`` in the body) and a
+                   configured ``--store-dir``: creates (sequences given)
+                   or loads (no sequences) a *persistent named
+                   alignment* in the ``store.MSAStore``
   POST /align/add  incremental insertion into a cached MSA against its
-                   frozen center (``incremental.add_to_msa``)
+                   frozen center (``incremental.add_to_msa``); with
+                   ``"name"`` the insertion commits a new store
+                   generation (atomic, crash-safe) and past the drift
+                   threshold schedules a *background* realign — readers
+                   keep the stale-but-valid generation until the
+                   realigned one swaps in
   POST /tree       TreeEngine over a cached MSA (tree results memoized
                    through the engine's cache hook) or fresh sequences;
                    ``"refine": "ml"`` routes through the ML refiner —
@@ -64,6 +73,8 @@ from ..phylo import TreeEngine
 from . import incremental
 from .cache import ResultCache, canonical_key, canonicalize
 from .queue import AlignJob, CoalescingAligner
+from .store import MSAStore
+from .store import StoreError as _StoreError
 
 _M_STARTED = _obs.counter("repro_requests_started_total",
                           "requests received (accepted + rejected)",
@@ -107,6 +118,10 @@ class ServiceConfig:
                                             # enables POST /search
     search_cfg: Optional[object] = None     # SearchConfig override
                                             # (default: index-matched)
+    store_dir: Optional[str] = None         # persistent MSAStore root:
+                                            # enables named alignments
+    store_keep: int = 4                     # generations retained / name
+    store_realign: str = "background"       # background | never
 
     def msa_cfg(self) -> MSAConfig:
         return MSAConfig(method=self.method, alphabet=self.alphabet,
@@ -167,6 +182,11 @@ class MSAService:
         self._active = 0
         self._active_cond = threading.Condition()
         self._t0 = time.time()
+        self.store = None
+        if cfg.store_dir is not None:
+            self.store = MSAStore(cfg.store_dir, keep=cfg.store_keep,
+                                  drift_threshold=cfg.drift_threshold,
+                                  realign=cfg.store_realign)
         self.search_engine = None
         self._search_db_fp = None
         if cfg.search_index is not None:
@@ -294,6 +314,51 @@ class MSAService:
         with self._request("align") as tid:
             return dict(self._align_impl(names, seqs), trace_id=tid)
 
+    # ------------------------------------------------- named (store-backed)
+
+    def _store_required(self):
+        if self.store is None:
+            raise ValueError("no persistent store configured "
+                             "(serve_msa --store-dir)")
+        return self.store
+
+    def _store_payload(self, entry) -> dict:
+        """Response body for a committed store generation."""
+        return {"name": entry.name, "generation": entry.generation,
+                "fingerprint": entry.fingerprint,
+                "names": list(entry.names),
+                "rows": self._decode_rows(entry.msa),
+                "width": entry.width, "center_idx": entry.center_idx}
+
+    def align_named(self, name: str, names: Optional[Sequence[str]] = None,
+                    seqs: Optional[Sequence[str]] = None) -> dict:
+        """``POST /align?name=``: create (sequences given) or load (no
+        sequences) a persistent named alignment."""
+        with self._request("align") as tid:
+            return dict(self._align_named_impl(name, names, seqs),
+                        trace_id=tid)
+
+    def _align_named_impl(self, name, names, seqs) -> dict:
+        t0 = time.perf_counter()
+        store = self._store_required()
+        if seqs:
+            seqs = list(seqs)
+            names = list(names) if names else [f"seq{i}"
+                                               for i in range(len(seqs))]
+            # align through the shared cached/coalesced path; the store
+            # persists the canonical order (what the cache entry holds)
+            _, entry, cached, _ = self._align_entry(names, seqs)
+            se = store.create(name, msa=entry["msa"],
+                              center_idx=entry["center_idx"],
+                              seqs=entry["seqs"], names=entry["names"])
+            created = True
+        else:
+            se = store.get(name)                 # KeyError -> 404
+            created, cached = False, True
+        return {"alignment": self._store_payload(se), "created": created,
+                "cached": cached, "store": store.stats(),
+                "elapsed_ms": (time.perf_counter() - t0) * 1e3}
+
     def _align_impl(self, names: Sequence[str], seqs: Sequence[str]) -> dict:
         t0 = time.perf_counter()
         names, seqs = list(names), list(seqs)
@@ -312,11 +377,25 @@ class MSAService:
                 "cache": self.cache.stats(),
                 "elapsed_ms": (time.perf_counter() - t0) * 1e3}
 
-    def align_add(self, msa_id: str, names: Sequence[str],
-                  seqs: Sequence[str]) -> dict:
+    def align_add(self, msa_id: Optional[str] = None,
+                  names: Sequence[str] = (), seqs: Sequence[str] = (), *,
+                  name: Optional[str] = None) -> dict:
         with self._request("align_add") as tid:
+            if name is not None:
+                return dict(self._align_add_named_impl(name, names, seqs),
+                            trace_id=tid)
             return dict(self._align_add_impl(msa_id, names, seqs),
                         trace_id=tid)
+
+    def _align_add_named_impl(self, name, names, seqs) -> dict:
+        """Continuous ingestion: one committed store generation per add."""
+        t0 = time.perf_counter()
+        store = self._store_required()
+        entry, info = store.add(name, list(names), list(seqs),
+                                self.msa_cfg, engine=self.engine)
+        return {"alignment": self._store_payload(entry), "add": info,
+                "store": store.stats(),
+                "elapsed_ms": (time.perf_counter() - t0) * 1e3}
 
     def _align_add_impl(self, msa_id: str, names: Sequence[str],
                         seqs: Sequence[str]) -> dict:
@@ -365,6 +444,7 @@ class MSAService:
             return dict(self._tree_impl(msa_id=msa_id, **kw), trace_id=tid)
 
     def _tree_impl(self, msa_id: Optional[str] = None,
+                   name: Optional[str] = None,
                    names: Optional[Sequence[str]] = None,
                    seqs: Optional[Sequence[str]] = None,
                    backend: Optional[str] = None,
@@ -373,9 +453,19 @@ class MSAService:
                    bootstrap: Optional[int] = None,
                    seed: Optional[int] = None) -> dict:
         t0 = time.perf_counter()
-        if msa_id is None:
+        store_entry = None
+        if name is not None:
+            # named alignments key the tree cache by the generation's
+            # content fingerprint — a tree can never mix generations,
+            # and an add or realign swap naturally invalidates it
+            store_entry = self._store_required().get(name)
+            entry = {"msa": store_entry.msa,
+                     "names": list(store_entry.names)}
+            msa_id = f"store:{name}@{store_entry.fingerprint}"
+        elif msa_id is None:
             if not seqs:
-                raise ValueError("tree request needs 'msa_id' or sequences")
+                raise ValueError(
+                    "tree request needs 'msa_id', 'name', or sequences")
             seqs = list(seqs)
             msa_id, entry, _, _ = self._align_entry(
                 list(names) if names else [f"seq{i}"
@@ -426,6 +516,10 @@ class MSAService:
                 "n_leaves": result.n_leaves, "cached_tree": cached_tree,
                 "cache": self.cache.stats(),
                 "elapsed_ms": (time.perf_counter() - t0) * 1e3}
+        if store_entry is not None:
+            resp["name"] = store_entry.name
+            resp["generation"] = store_entry.generation
+            resp["fingerprint"] = store_entry.fingerprint
         if result.logl is not None:
             resp["model"] = result.model
             resp["logl"] = result.logl
@@ -515,6 +609,8 @@ class MSAService:
                 "active_requests": self._active,
                 "cache": snap["cache"],
                 "queue": snap["queue"],
+                "store": (self.store.stats()
+                          if self.store is not None else None),
                 "search_db": (self.cfg.search_index.n_seqs
                               if self.cfg.search_index is not None
                               else None)}
@@ -533,6 +629,18 @@ class MSAService:
             "",
             "cache   " + " ".join(f"{k}={v}" for k, v in h["cache"].items()),
             "queue   " + " ".join(f"{k}={v}" for k, v in h["queue"].items()),
+        ]
+        if h["store"] is not None:
+            st = dict(h["store"])
+            gens = st.pop("generations")
+            lines.append("store   " + " ".join(f"{k}={v}"
+                                               for k, v in st.items()))
+            for n, g in gens.items():
+                e = self.store.get(n)
+                lines.append(f"  {n:<16} generation={g} width={e.width} "
+                             f"members={len(e.names)} "
+                             f"fingerprint={e.fingerprint[:12]}")
+        lines += [
             "",
             "requests (started == finished + rejected):",
         ]
@@ -563,6 +671,10 @@ class MSAService:
             done = self._active_cond.wait_for(lambda: self._active == 0,
                                               timeout)
         self.coalescer.close()
+        if self.store is not None:
+            # queued realigns finish and swap before exit; their commits
+            # are atomic either way, so this only buys wall-clock
+            self.store.close(wait=True)
         return done
 
 
@@ -610,30 +722,45 @@ class _Handler(BaseHTTPRequestHandler):
             self._send(404, {"error": f"unknown path {self.path}"})
 
     def do_POST(self):
+        from urllib.parse import parse_qs, urlsplit
+
         svc: MSAService = self.server.service
         try:
+            parts = urlsplit(self.path)
+            path = parts.path
             payload = self._payload()
-            if self.path == "/align":
+            # ?name=x and {"name": "x"} are equivalent; the body wins
+            qs_name = parse_qs(parts.query).get("name", [None])[0]
+            name = payload.get("name") or qs_name
+            if path == "/align":
+                if name is not None:
+                    has_seqs = "fasta" in payload or "sequences" in payload
+                    names, seqs = (parse_sequences(payload)
+                                   if has_seqs else (None, None))
+                    self._send(200, svc.align_named(name, names, seqs))
+                else:
+                    names, seqs = parse_sequences(payload)
+                    self._send(200, svc.align(names, seqs))
+            elif path == "/align/add":
+                if name is None and "msa_id" not in payload:
+                    raise ValueError("align/add needs 'msa_id' or 'name'")
                 names, seqs = parse_sequences(payload)
-                self._send(200, svc.align(names, seqs))
-            elif self.path == "/align/add":
-                if "msa_id" not in payload:
-                    raise ValueError("align/add needs 'msa_id'")
-                names, seqs = parse_sequences(payload)
-                self._send(200, svc.align_add(payload["msa_id"], names,
-                                              seqs))
-            elif self.path == "/tree":
+                self._send(200, svc.align_add(payload.get("msa_id"),
+                                              names, seqs, name=name))
+            elif path == "/tree":
                 tree_kw = {k: payload.get(k) for k in
                            ("backend", "refine", "model", "bootstrap",
                             "seed")}
-                if "msa_id" in payload:
+                if name is not None:
+                    self._send(200, svc.tree(name=name, **tree_kw))
+                elif "msa_id" in payload:
                     self._send(200, svc.tree(msa_id=payload["msa_id"],
                                              **tree_kw))
                 else:
                     names, seqs = parse_sequences(payload)
                     self._send(200, svc.tree(names=names, seqs=seqs,
                                              **tree_kw))
-            elif self.path == "/search":
+            elif path == "/search":
                 names, seqs = parse_sequences(payload)
                 kw = {k: payload.get(k) for k in
                       ("max_hits", "min_coverage", "max_evalue")}
@@ -644,6 +771,8 @@ class _Handler(BaseHTTPRequestHandler):
             self._send(404, {"error": str(e)})
         except (ValueError, json.JSONDecodeError) as e:
             self._send(400, {"error": str(e)})
+        except _StoreError as e:
+            self._send(409, {"error": str(e)})
         except RuntimeError as e:
             self._send(503, {"error": str(e)})
 

@@ -1,0 +1,635 @@
+"""Executable spec of the persistent MSA store (ISSUE 10).
+
+Four harnesses make the stateful subsystem trustworthy:
+
+  * crash-atomicity: faults injected at randomized points inside the
+    commit path (>= 200 schedules) — after "restart" (a fresh
+    ``MSAStore`` over the same directory) the named alignment restores
+    to exactly the previous committed generation or exactly the new
+    one, never a torn state, and ingestion continues;
+  * concurrency stress: threads interleave ``/align/add`` + ``/align``
+    + ``/tree`` against one named alignment through the real HTTP
+    front end — every response is internally consistent, generations
+    are monotone per thread, counters reconcile on drain, and the
+    final store contents equal a serial replay of the committed order;
+  * incremental-vs-realign property: random add sequences onto random
+    seed MSAs stay bit-identical to a full center-star realign, and a
+    drift-triggered background realign swap is bit-identical to a cold
+    full realign of the same member set;
+  * kill-and-resume e2e (subprocess): SIGKILL of a serving worker, then
+    restart from the same ``--store-dir``, restores every committed
+    generation bit-identically and keeps ingesting.
+"""
+import json
+import os
+import signal
+import socket
+import subprocess
+import sys
+import threading
+import time
+import urllib.error
+import urllib.request
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # CI image has no hypothesis; seeded fallback
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core.alphabet import DNA
+from repro.core.msa import MSAConfig, center_star_msa
+from repro.dist.fault import StepFailure
+from repro.obs import REGISTRY
+from repro.serve import MSAService, ServiceConfig, serve_http
+from repro.serve.store import (COMMIT_FAULT_LABELS, MSAStore, StoreError,
+                               content_fingerprint)
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+CFG = MSAConfig(method="plain")
+
+
+def _seq(rng, n):
+    return "".join("ACGT"[c] for c in rng.integers(0, 4, n))
+
+
+def _sub(s, rng, k=2):
+    s = list(s)
+    for _ in range(k):
+        s[rng.integers(0, len(s))] = "ACGT"[rng.integers(0, 4)]
+    return "".join(s)
+
+
+def _make_store(tmp_path, **kw):
+    kw.setdefault("drift_threshold", 10.0)
+    return MSAStore(tmp_path / "store", **kw)
+
+
+def _seeded(store, name="fam", n=3, L=40, seed=0):
+    rng = np.random.default_rng(seed)
+    base = _seq(rng, L)
+    fam = [base] + [_sub(base, rng) for _ in range(n - 1)]
+    res = center_star_msa(fam, CFG)
+    return store.create(name, msa=res.msa, center_idx=res.center_idx,
+                        seqs=fam, names=[f"m{i}" for i in range(n)]), fam
+
+
+def _entries_equal(a, b):
+    return (a.generation == b.generation and a.fingerprint == b.fingerprint
+            and np.array_equal(a.msa, b.msa) and a.seqs == b.seqs
+            and a.names == b.names and a.center_idx == b.center_idx
+            and a.base_width == b.base_width)
+
+
+# ------------------------------------------------------------- store basics
+
+def test_store_create_add_restart_roundtrip(tmp_path):
+    store = _make_store(tmp_path, keep=8)
+    e0, fam = _seeded(store)
+    rng = np.random.default_rng(1)
+    new = [fam[0][:11] + "ACG" + fam[0][11:]]
+    e1, info = store.add("fam", ["d"], new, CFG)
+    assert e1.generation == 1 and info["n_new"] == 1
+    assert e1.seqs == tuple(fam) + tuple(new)
+    # incremental commit is bit-identical to the full realign (same
+    # frozen first-center) — the serve-layer invariant now persistent
+    full = center_star_msa(fam + new, CFG)
+    assert np.array_equal(e1.msa, full.msa)
+    store.close()
+
+    # "restart": a fresh store over the same directory
+    store2 = _make_store(tmp_path)
+    r = store2.get("fam")
+    assert _entries_equal(r, e1)
+    assert store2.names() == ["fam"]
+    # ingestion continues from the restored generation
+    e2, _ = store2.add("fam", ["e"], [_sub(fam[0], rng)], CFG)
+    assert e2.generation == 2
+    store2.close()
+
+
+def test_store_retention_keeps_newest_generations(tmp_path):
+    store = _make_store(tmp_path, keep=2)
+    _, fam = _seeded(store)
+    rng = np.random.default_rng(2)
+    for i in range(4):
+        store.add("fam", [f"x{i}"], [_sub(fam[0], rng)], CFG)
+    gens = store.generations("fam")
+    assert gens == [3, 4]                        # newest keep=2 retained
+    store.close()
+
+
+def test_store_rejects_bad_names_and_duplicates(tmp_path):
+    store = _make_store(tmp_path)
+    _seeded(store)
+    with pytest.raises(StoreError, match="already exists"):
+        _seeded(store)
+    with pytest.raises(ValueError, match="invalid alignment name"):
+        store.create("../evil", msa=np.zeros((1, 4), np.int8),
+                     center_idx=0, seqs=["AAAA"], names=["a"])
+    with pytest.raises(KeyError):
+        store.get("nope")
+    store.close()
+
+
+def test_corrupt_latest_generation_falls_back(tmp_path):
+    store = _make_store(tmp_path, keep=8)
+    e0, fam = _seeded(store)
+    rng = np.random.default_rng(3)
+    e1, _ = store.add("fam", ["d"], [_sub(fam[0], rng)], CFG)
+    store.close()
+
+    # torn bytes: truncate the newest generation file
+    p1 = tmp_path / "store" / "fam" / f"gen_{1:010d}.npz"
+    p1.write_bytes(p1.read_bytes()[:100])
+    with pytest.warns(UserWarning, match="unreadable"):
+        r = _make_store(tmp_path).get("fam")
+    assert _entries_equal(r, e0)                 # previous generation wins
+
+    # content/fingerprint mismatch: a readable file that lies is skipped
+    from repro.dist.checkpoint import atomic_save_npz
+    atomic_save_npz(p1, {
+        "schema_version": np.int64(1), "name": np.str_("fam"),
+        "msa": e0.msa, "center_idx": np.int64(e0.center_idx),
+        "generation": np.int64(1), "base_width": np.int64(e0.base_width),
+        "seqs": np.array(e0.seqs), "names": np.array(e0.names),
+        "fingerprint": np.str_("0" * 64)})
+    with pytest.warns(UserWarning, match="fingerprint mismatch"):
+        r = _make_store(tmp_path).get("fam")
+    assert _entries_equal(r, e0)
+
+
+# --------------------------------------------------- crash-atomicity (prop)
+
+class _FaultAt:
+    """Raises StepFailure at the k-th hook invocation; records the label."""
+
+    def __init__(self, fire_at):
+        self.fire_at = fire_at
+        self.calls = 0
+        self.fired_label = None
+
+    def __call__(self, label):
+        self.calls += 1
+        if self.calls == self.fire_at:
+            self.fired_label = label
+            raise StepFailure(f"injected at {label}")
+
+
+def test_commit_crash_atomicity_property(tmp_path):
+    """>= 200 randomized fault schedules over the commit path: restore
+    always yields the previous committed generation (fault before the
+    atomic replace) or the new one (fault at/after it) — never a torn
+    state — and ingestion continues after every "restart"."""
+    import random
+
+    # fixed family so jit caches are shared across all schedules
+    rng = np.random.default_rng(7)
+    base = _seq(rng, 32)
+    fam = [base, _sub(base, rng), _sub(base, rng)]
+    adds = [base[:9] + "ACG" + base[9:], _sub(base, rng),
+            base[:20] + "T" + base[20:]]
+    res = center_star_msa(fam, CFG)
+    n_labels = len(COMMIT_FAULT_LABELS)
+    # labels strictly before the replace must roll back; at/after, commit
+    replace_idx = COMMIT_FAULT_LABELS.index("save.post-replace")
+
+    n_schedules = 0
+    for seed in range(200):
+        r = random.Random(seed)
+        root = tmp_path / f"s{seed}"
+        store = MSAStore(root, keep=8, drift_threshold=10.0)
+        e, _ = _seeded_fixed(store, fam, res)
+        # 0-2 clean adds first so faults hit arbitrary generations
+        for j in range(r.randrange(3)):
+            e, _ = store.add("fam", [f"pre{j}"], [adds[j]], CFG)
+        prev = store.get("fam")
+
+        fault = _FaultAt(r.randrange(1, n_labels + 1))
+        store.fault_hook = fault
+        new_seq = adds[r.randrange(len(adds))]
+        with pytest.raises(StepFailure):
+            store.add("fam", ["faulted"], [new_seq], CFG)
+        store.fault_hook = None
+        store.close()
+        n_schedules += 1
+
+        restored = MSAStore(root, keep=8, drift_threshold=10.0)
+        got = restored.get("fam")
+        fired = COMMIT_FAULT_LABELS.index(fault.fired_label)
+        if fired < replace_idx:
+            # crash before the replace: previous generation, bit-identical
+            assert _entries_equal(got, prev), \
+                f"seed {seed}: torn state after fault at {fault.fired_label}"
+        else:
+            # crash after the replace: the commit happened exactly once
+            assert got.generation == prev.generation + 1
+            assert got.seqs == prev.seqs + (new_seq,)
+            assert got.names == prev.names + ("faulted",)
+            assert content_fingerprint(got.msa, got.center_idx,
+                                       got.names) == got.fingerprint
+        # ingestion continues from the restored truth
+        nxt, _ = restored.add("fam", ["after"], [adds[0]], CFG)
+        assert nxt.generation == got.generation + 1
+        restored.close()
+    assert n_schedules >= 200
+
+
+def _seeded_fixed(store, fam, res):
+    entry = store.create("fam", msa=res.msa, center_idx=res.center_idx,
+                         seqs=fam, names=[f"m{i}" for i in range(len(fam))])
+    return entry, fam
+
+
+# --------------------------------------- incremental vs realign (property)
+
+DNA_SEQ = st.text(alphabet="ACGT", min_size=8, max_size=40)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(DNA_SEQ, min_size=2, max_size=4),
+       st.lists(DNA_SEQ, min_size=1, max_size=3))
+def test_store_adds_bit_identical_to_full_realign(seed_fam, new_seqs):
+    """Every committed generation of accreted adds equals the cold full
+    center-star realign of the same member set (same frozen first
+    center) — the serve-layer incremental invariant, now per
+    generation and persistent."""
+    import tempfile
+    res = center_star_msa(seed_fam, CFG)
+    with tempfile.TemporaryDirectory() as d:
+        store = MSAStore(d, keep=99, drift_threshold=10.0, realign="never")
+        store.create("fam", msa=res.msa, center_idx=res.center_idx,
+                     seqs=seed_fam,
+                     names=[f"m{i}" for i in range(len(seed_fam))])
+        members = list(seed_fam)
+        for g, s in enumerate(new_seqs, start=1):
+            entry, _ = store.add("fam", [f"n{g}"], [s], CFG)
+            members.append(s)
+            full = center_star_msa(members, CFG)
+            assert entry.generation == g
+            assert entry.width == full.width
+            assert np.array_equal(entry.msa, full.msa), \
+                f"generation {g} diverged from the cold realign"
+        store.close()
+
+
+def test_background_realign_swap_is_cold_full_realign(tmp_path):
+    store = _make_store(tmp_path, keep=8, drift_threshold=0.2)
+    e0, fam = _seeded(store)
+    # an insert-heavy add pushes cumulative growth past the threshold
+    big = fam[0][:4] + "ACGTACGTACGTACGT" + fam[0][4:]
+    e1, info = store.add("fam", ["big"], [big], CFG)
+    assert info["drifted"] and info["realign_pending"]
+    # readers are never blocked: whatever they see is a committed
+    # generation — the pre-swap one or (if the worker won the race)
+    # the realigned one
+    assert store.get("fam").generation in (e1.generation,
+                                           e1.generation + 1)
+    store.wait_realigns(timeout=300)
+    swapped = store.get("fam")
+    cold = center_star_msa(list(e1.seqs), CFG)
+    assert swapped.generation == e1.generation + 1
+    assert np.array_equal(swapped.msa, cold.msa)
+    assert swapped.base_width == cold.width      # drift baseline reset
+    assert swapped.growth() == 0.0
+    # the swap is durable: a restart restores the realigned generation
+    store.close()
+    store2 = _make_store(tmp_path)
+    assert _entries_equal(store2.get("fam"), swapped)
+    store2.close()
+
+
+# ------------------------------------------------- service + tree wiring
+
+def test_service_named_align_add_tree_generation_keys(tmp_path):
+    svc = MSAService(ServiceConfig(max_wait_ms=1.0,
+                                   store_dir=str(tmp_path / "store"),
+                                   store_realign="never"))
+    rng = np.random.default_rng(11)
+    base = _seq(rng, 60)
+    fam = [base, _sub(base, rng), _sub(base, rng)]
+    r = svc.align_named("flu", ["a", "b", "c"], fam)
+    assert r["created"] is True
+    assert r["alignment"]["generation"] == 0
+    fp0 = r["alignment"]["fingerprint"]
+
+    # load without sequences returns the committed generation
+    r2 = svc.align_named("flu")
+    assert r2["created"] is False
+    assert r2["alignment"]["fingerprint"] == fp0
+
+    # creating over an existing name is a conflict, not an overwrite
+    with pytest.raises(StoreError, match="already exists"):
+        svc.align_named("flu", ["x"], ["ACGTACGT"])
+
+    t0 = svc.tree(name="flu")
+    t0b = svc.tree(name="flu")
+    assert t0["cached_tree"] is False and t0b["cached_tree"] is True
+    assert t0["fingerprint"] == fp0
+
+    # an add bumps the generation; the tree key follows the fingerprint,
+    # so the next tree is a rebuild — trees never mix generations
+    ra = svc.align_add(names=["d"], seqs=[_sub(base, rng)], name="flu")
+    assert ra["alignment"]["generation"] == 1
+    assert ra["alignment"]["fingerprint"] != fp0
+    t1 = svc.tree(name="flu")
+    assert t1["cached_tree"] is False
+    assert t1["fingerprint"] == ra["alignment"]["fingerprint"]
+    assert t1["n_leaves"] == 4
+
+    h = svc.healthz()
+    assert h["store"]["names"] == 1
+    assert h["store"]["generations"] == {"flu": 1}
+    assert "flu" in svc.statusz()
+    svc.drain()
+
+    # the service layer restores the store across restarts
+    svc2 = MSAService(ServiceConfig(max_wait_ms=1.0,
+                                    store_dir=str(tmp_path / "store"),
+                                    store_realign="never"))
+    r3 = svc2.align_named("flu")
+    assert r3["alignment"]["generation"] == 1
+    assert r3["alignment"]["fingerprint"] == ra["alignment"]["fingerprint"]
+    assert r3["alignment"]["rows"] == ra["alignment"]["rows"]
+    svc2.drain()
+
+
+def test_service_without_store_rejects_named_requests():
+    svc = MSAService(ServiceConfig(max_wait_ms=1.0))
+    with pytest.raises(ValueError, match="store"):
+        svc.align_named("flu", ["a"], ["ACGT"])
+    with pytest.raises(ValueError, match="store"):
+        svc.tree(name="flu")
+    svc.drain()
+
+
+# ------------------------------------------------- HTTP concurrency stress
+
+def _post(port, path, obj, timeout=120):
+    req = urllib.request.Request(
+        f"http://127.0.0.1:{port}{path}",
+        data=json.dumps(obj).encode(),
+        headers={"Content-Type": "application/json"})
+    try:
+        with urllib.request.urlopen(req, timeout=timeout) as resp:
+            return resp.status, json.loads(resp.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read())
+
+
+def _counter_totals(snap):
+    out = {}
+    for fam in ("repro_requests_started_total",
+                "repro_requests_finished_total",
+                "repro_requests_rejected_total"):
+        out[fam] = sum(s["value"]
+                       for s in snap.get(fam, {"samples": []})["samples"])
+    return out
+
+
+def test_concurrent_http_stress_is_consistent_and_replayable(tmp_path):
+    """N threads interleave /align/add + /align + /tree on one named
+    alignment through the real HTTP front end: no 500s, every response
+    internally consistent, per-thread generations monotone, counters
+    reconcile on drain, and the final store equals a serial replay of
+    the committed add order."""
+    svc = MSAService(ServiceConfig(max_wait_ms=1.0,
+                                   store_dir=str(tmp_path / "store"),
+                                   store_realign="never"))
+    httpd = serve_http(svc, "127.0.0.1", 0)
+    port = httpd.server_address[1]
+    threading.Thread(target=httpd.serve_forever, daemon=True).start()
+    before = _counter_totals(REGISTRY.snapshot())
+
+    rng = np.random.default_rng(13)
+    base = _seq(rng, 50)
+    fam = [base, _sub(base, rng), _sub(base, rng)]
+    st_, r = _post(port, "/align", {"name": "stress", "sequences": fam,
+                                    "names": ["s0", "s1", "s2"]})
+    assert st_ == 200 and r["created"]
+    # the create path persists the *canonical* member order — snapshot
+    # generation 0 as the replay seed
+    seed = svc.store.get("stress")
+    assert seed.generation == 0
+
+    n_threads, ops_per_thread = 6, 6
+    # substitution-only adds: width stays fixed, so no drift/realign —
+    # the interleaving is the only nondeterminism under test
+    add_seqs = {f"t{t}a{i}": _sub(base, rng)
+                for t in range(n_threads) for i in range(ops_per_thread)}
+    failures, lock = [], threading.Lock()
+
+    def worker(t):
+        local_rng = np.random.default_rng(100 + t)
+        last_gen = -1
+        for i in range(ops_per_thread):
+            op = ("add", "read", "tree")[int(local_rng.integers(0, 3))]
+            try:
+                if op == "add":
+                    key = f"t{t}a{i}"
+                    code, resp = _post(port, "/align/add",
+                                       {"name": "stress",
+                                        "sequences": [add_seqs[key]],
+                                        "names": [key]})
+                elif op == "read":
+                    code, resp = _post(port, "/align", {"name": "stress"})
+                else:
+                    code, resp = _post(port, "/tree", {"name": "stress"})
+                assert code == 200, f"{op} -> {code}: {resp}"
+                if op == "tree":
+                    assert resp["newick"].endswith(";")
+                    gen = resp["generation"]
+                else:
+                    aln = resp["alignment"]
+                    gen = aln["generation"]
+                    # internally consistent: one width, rows decode to
+                    # their ungapped members
+                    assert all(len(row) == aln["width"]
+                               for row in aln["rows"])
+                    assert len(aln["rows"]) == len(aln["names"])
+                assert gen >= last_gen, "generation went backwards"
+                last_gen = gen
+            except Exception as e:                # noqa: BLE001
+                with lock:
+                    failures.append(f"thread {t} op {i} ({op}): {e!r}")
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert not failures, failures
+
+    httpd.shutdown()
+    httpd.server_close()
+    svc.drain()
+
+    # drain reconciles: started == finished + rejected (delta over test)
+    after = _counter_totals(REGISTRY.snapshot())
+    d_started = after["repro_requests_started_total"] \
+        - before["repro_requests_started_total"]
+    d_finished = after["repro_requests_finished_total"] \
+        - before["repro_requests_finished_total"]
+    d_rejected = after["repro_requests_rejected_total"] \
+        - before["repro_requests_rejected_total"]
+    assert d_started == d_finished + d_rejected
+
+    # final store contents == serial replay of the committed add order
+    final = svc.store.get("stress")
+    assert final.names[:len(seed.names)] == seed.names
+    committed = list(final.names[len(seed.names):])
+    replay = MSAStore(tmp_path / "replay", keep=4, drift_threshold=10.0,
+                      realign="never")
+    replay.create("stress", msa=seed.msa, center_idx=seed.center_idx,
+                  seqs=seed.seqs, names=seed.names)
+    for key in committed:
+        replay.add("stress", [key], [add_seqs[key]], CFG)
+    replayed = replay.get("stress")
+    assert replayed.generation == final.generation
+    assert np.array_equal(replayed.msa, final.msa)
+    assert replayed.fingerprint == final.fingerprint
+    replay.close()
+
+
+# --------------------------------------------------- kill-and-resume (e2e)
+
+def _free_port():
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def _spawn_server(store_dir):
+    port = _free_port()
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.serve_msa",
+         "--port", str(port), "--max-wait-ms", "1",
+         "--store-dir", str(store_dir), "--store-realign", "never"],
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT)
+    deadline = time.time() + 300
+    while True:
+        try:
+            with urllib.request.urlopen(
+                    f"http://127.0.0.1:{port}/healthz", timeout=5) as r:
+                json.loads(r.read())
+            return proc, port
+        except (urllib.error.URLError, OSError):
+            if proc.poll() is not None:
+                out = proc.stdout.read().decode(errors="replace")
+                raise RuntimeError(f"serve_msa died at startup:\n{out}")
+            if time.time() > deadline:
+                proc.kill()
+                raise RuntimeError("serve_msa did not become healthy")
+            time.sleep(0.3)
+
+
+def _rows_fingerprint(aln):
+    """Recompute the content fingerprint from a JSON alignment payload —
+    the client-side integrity check that a response is not torn."""
+    msa = np.stack([DNA.encode_aligned(row) for row in aln["rows"]])
+    return content_fingerprint(msa, aln["center_idx"], aln["names"])
+
+
+def test_kill_and_resume_restores_committed_state(tmp_path):
+    """SIGKILL a serving worker (idle, then again mid-traffic); each
+    restart from the same --store-dir restores the last committed
+    generation bit-identically and ingestion continues."""
+    store_dir = tmp_path / "store"
+    rng = np.random.default_rng(17)
+    base = _seq(rng, 48)
+    fam = [base, _sub(base, rng), _sub(base, rng)]
+
+    proc, port = _spawn_server(store_dir)
+    try:
+        st_, r = _post(port, "/align", {"name": "cov", "sequences": fam,
+                                        "names": ["a", "b", "c"]})
+        assert st_ == 200
+        for i in range(3):
+            st_, r = _post(port, "/align/add",
+                           {"name": "cov", "sequences": [_sub(base, rng)],
+                            "names": [f"d{i}"]})
+            assert st_ == 200
+        committed = r["alignment"]             # gen 3, quiesced
+        assert committed["generation"] == 3
+        assert _rows_fingerprint(committed) == committed["fingerprint"]
+    finally:
+        proc.kill()
+        proc.wait()
+
+    # ---- restart 1: idle kill — restore must be bit-identical
+    proc, port = _spawn_server(store_dir)
+    killed_mid_traffic = []
+    try:
+        st_, r = _post(port, "/align", {"name": "cov"})
+        assert st_ == 200
+        aln = r["alignment"]
+        assert aln["generation"] == committed["generation"]
+        assert aln["fingerprint"] == committed["fingerprint"]
+        assert aln["rows"] == committed["rows"]
+        assert aln["names"] == committed["names"]
+
+        # now kill MID-TRAFFIC: adds racing the SIGKILL; responses that
+        # made it back are commitments the restart must honor
+        stop = threading.Event()
+
+        def traffic():
+            i = 0
+            while not stop.is_set() and i < 50:
+                try:
+                    code, resp = _post(port, "/align/add",
+                                       {"name": "cov",
+                                        "sequences": [_sub(base, rng)],
+                                        "names": [f"k{i}"]},
+                                       timeout=10)
+                    if code == 200:
+                        killed_mid_traffic.append(resp["alignment"])
+                except Exception:              # noqa: BLE001
+                    return                     # server died under us
+                i += 1
+
+        t = threading.Thread(target=traffic)
+        t.start()
+        time.sleep(0.4)                        # let some adds commit
+        proc.send_signal(signal.SIGKILL)
+        stop.set()
+        t.join(timeout=60)
+    finally:
+        proc.kill()
+        proc.wait()
+
+    # ---- restart 2: mid-traffic kill — last acknowledged add is durable
+    proc, port = _spawn_server(store_dir)
+    try:
+        st_, r = _post(port, "/align", {"name": "cov"})
+        assert st_ == 200
+        aln = r["alignment"]
+        # never torn: the payload's content hashes to its fingerprint
+        assert _rows_fingerprint(aln) == aln["fingerprint"]
+        acked = killed_mid_traffic[-1] if killed_mid_traffic else committed
+        assert aln["generation"] >= acked["generation"]
+        if aln["generation"] == acked["generation"]:
+            # bit-identical to the last acknowledged committed state
+            assert aln["fingerprint"] == acked["fingerprint"]
+            assert aln["rows"] == acked["rows"]
+        else:
+            # at most one unacknowledged-but-committed add beyond it
+            n = len(acked["names"])
+            assert aln["names"][:n] == acked["names"]
+        # ingestion continues across the crash
+        st_, r2 = _post(port, "/align/add",
+                        {"name": "cov", "sequences": [_sub(base, rng)],
+                         "names": ["resumed"]})
+        assert st_ == 200
+        assert r2["alignment"]["generation"] == aln["generation"] + 1
+        st_, t2 = _post(port, "/tree", {"name": "cov"})
+        assert st_ == 200 and t2["newick"].endswith(";")
+        assert t2["fingerprint"] == r2["alignment"]["fingerprint"]
+    finally:
+        proc.kill()
+        proc.wait()
